@@ -1,0 +1,29 @@
+"""Design-space exploration: mesh geometry x routing policy, beyond the
+paper's three points (fig 15) — including the minimal-routing ablation and
+the circuit-hold variant.
+
+  PYTHONPATH=src python examples/ssd_design_space.py
+"""
+import time
+
+from repro.ssd import perf_optimized
+from repro.ssd.bench import geomean, run_workload
+
+WORKLOADS = ["proj_3", "src2_1"]
+DESIGNS = ("baseline", "nossd", "venice_minimal", "venice_hold", "venice",
+           "ideal")
+
+print(f"{'mesh':8s} " + " ".join(f"{d:>14s}" for d in DESIGNS))
+for (rows, cols) in ((4, 16), (8, 8), (16, 4)):
+    cfg = perf_optimized(rows=rows, cols=cols)
+    gm = {d: [] for d in DESIGNS}
+    t0 = time.time()
+    for wl in WORKLOADS:
+        run = run_workload(wl, cfg, designs=DESIGNS, n_requests=1500)
+        for d in DESIGNS:
+            gm[d].append(run.speedup(d))
+    print(f"{rows}x{cols:<6d} "
+          + " ".join(f"{geomean(gm[d]):13.2f}x" for d in DESIGNS)
+          + f"   ({time.time()-t0:.0f}s)")
+print("\nvenice_minimal = Algorithm 1 without misrouting (adaptivity ablation)")
+print("venice_hold    = circuit held across tR (link-hours ablation)")

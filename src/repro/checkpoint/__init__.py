@@ -1,0 +1,10 @@
+"""Sharded checkpointing: per-host files, atomic manifest, restart-from-
+latest, elastic re-shard."""
+from repro.checkpoint.store import (
+    latest_step,
+    restore,
+    restore_latest,
+    save,
+)
+
+__all__ = ["latest_step", "restore", "restore_latest", "save"]

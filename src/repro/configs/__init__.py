@@ -1,0 +1,22 @@
+"""Assigned architecture configs (exact values from the assignment block).
+
+``get_config(arch)`` returns the full-size ``LMConfig``; ``get_smoke(arch)``
+a reduced same-family variant for CPU tests; ``input_specs(arch, shape)``
+ShapeDtypeStruct stand-ins for every model input of a (arch x shape) cell;
+``SHAPES`` / ``applicable_shapes(arch)`` encode the skip rules (long_500k
+only for sub-quadratic archs; decode shapes for decoder-bearing archs).
+"""
+from repro.configs.archs import (
+    ARCHS,
+    SHAPES,
+    applicable_shapes,
+    get_config,
+    get_smoke,
+    input_specs,
+    shape_skip_reason,
+)
+
+__all__ = [
+    "ARCHS", "SHAPES", "applicable_shapes", "get_config", "get_smoke",
+    "input_specs", "shape_skip_reason",
+]

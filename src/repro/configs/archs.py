@@ -1,0 +1,183 @@
+"""The 10 assigned architectures — exact configuration values.
+
+Sources are the assignment block (verbatim); [source; verified-tier] noted
+per arch.  Where the assignment is silent (head_dim, rope theta, window
+sizes, MoE first-dense layers) we use the published model-card values and
+note them inline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import LMConfig
+
+# shape name -> (seq_len, global_batch, kind)
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+_BF16 = jnp.bfloat16
+
+
+def _mk(**kw) -> LMConfig:
+    kw.setdefault("dtype", _BF16)
+    kw.setdefault("param_dtype", _BF16)
+    return LMConfig(**kw)
+
+
+ARCHS = {
+    # [hybrid] Mamba2 + shared attn blocks [arXiv:2411.15242; hf]
+    "zamba2-2.7b": _mk(
+        name="zamba2-2.7b", family="hybrid", n_layers=54, d_model=2560,
+        n_heads=32, n_kv=32, d_ff=10240, vocab=32000, ssm_state=64,
+        hybrid_period=6,
+    ),
+    # [moe] MLA kv_lora=512, 2 shared + 64 routed top-6 [arXiv:2405.04434; hf]
+    # (assignment header says "64e top-6"; the detail line's "160 routed" is
+    # the V2-full config — we follow the 64-expert Lite header.)
+    "deepseek-v2-lite-16b": _mk(
+        name="deepseek-v2-lite-16b", family="moe", n_layers=27, d_model=2048,
+        n_heads=16, n_kv=16, d_ff=10944, vocab=102400, head_dim=128,
+        moe_experts=64, moe_top_k=6, moe_ff=1408, moe_shared=2,
+        moe_first_dense=1, mla_kv_rank=512, mla_rope_dim=64,
+    ),
+    # [moe] Kimi K2 — trillion-param MoE [arXiv:2501.kimi2; unverified]
+    "kimi-k2-1t-a32b": _mk(
+        name="kimi-k2-1t-a32b", family="moe", n_layers=61, d_model=7168,
+        n_heads=64, n_kv=8, d_ff=18432, vocab=163840, head_dim=112,
+        moe_experts=384, moe_top_k=8, moe_ff=2048, moe_shared=1,
+        moe_first_dense=1,
+    ),
+    # [ssm] SSD (state-space duality) [arXiv:2405.21060; unverified]
+    "mamba2-130m": _mk(
+        name="mamba2-130m", family="ssm", n_layers=24, d_model=768,
+        n_heads=1, n_kv=1, d_ff=0, vocab=50280, ssm_state=128,
+    ),
+    # [dense] GQA, QKV bias [arXiv:2407.10671; hf]
+    "qwen2-0.5b": _mk(
+        name="qwen2-0.5b", family="dense", n_layers=24, d_model=896,
+        n_heads=14, n_kv=2, d_ff=4864, vocab=151936, qkv_bias=True,
+        rope_theta=1e6,
+    ),
+    # [dense] [hf:mistralai/Mistral-Large-Instruct-2407; unverified]
+    "mistral-large-123b": _mk(
+        name="mistral-large-123b", family="dense", n_layers=88, d_model=12288,
+        n_heads=96, n_kv=8, d_ff=28672, vocab=32768, head_dim=128,
+        rope_theta=1e6,
+    ),
+    # [dense] GQA [hf:ibm-granite/granite-3.0-2b-base; hf]
+    "granite-3-2b": _mk(
+        name="granite-3-2b", family="dense", n_layers=40, d_model=2048,
+        n_heads=32, n_kv=8, d_ff=8192, vocab=49155,
+    ),
+    # [dense] local+global alternating, logit softcap [arXiv:2408.00118; hf]
+    "gemma2-2b": _mk(
+        name="gemma2-2b", family="gemma", n_layers=26, d_model=2304,
+        n_heads=8, n_kv=4, d_ff=9216, vocab=256000, head_dim=256,
+        window=4096, attn_softcap=50.0, final_softcap=30.0,
+    ),
+    # [vlm] cross-attn image layers [hf:meta-llama/Llama-3.2-11B-Vision; unverified]
+    "llama-3.2-vision-90b": _mk(
+        name="llama-3.2-vision-90b", family="vlm", n_layers=100, d_model=8192,
+        n_heads=64, n_kv=8, d_ff=28672, vocab=128256, head_dim=128,
+        rope_theta=5e5, cross_attn_period=5, vision_dim=1280,
+        n_img_tokens=1601,
+    ),
+    # [audio] enc-dec, conv frontend (stub) [arXiv:2212.04356; unverified]
+    "whisper-base": _mk(
+        name="whisper-base", family="audio", n_layers=6, d_model=512,
+        n_heads=8, n_kv=8, d_ff=2048, vocab=51865, enc_layers=6,
+        n_audio_frames=1500,
+    ),
+}
+
+# gemma2-2b has 26 layers (13 local/global pairs) — n_layers must be even ✓
+
+
+_SMOKE_OVER = dict(dtype=jnp.float32, param_dtype=jnp.float32, remat=False)
+
+
+def get_config(arch: str) -> LMConfig:
+    return ARCHS[arch]
+
+
+def get_smoke(arch: str) -> LMConfig:
+    """Reduced same-family config: small widths/layers/experts/vocab."""
+    c = ARCHS[arch]
+    import dataclasses
+
+    def ov(**kw):
+        kw.update(_SMOKE_OVER)
+        return dataclasses.replace(c, **kw)
+
+    if c.family == "moe":
+        return ov(n_layers=3, d_model=64, n_heads=4, n_kv=4 if not c.mla_kv_rank else 4,
+                  head_dim=16, d_ff=128, vocab=256, moe_experts=8, moe_top_k=2,
+                  moe_ff=32, moe_shared=min(c.moe_shared, 1), moe_first_dense=1,
+                  mla_kv_rank=32 if c.mla_kv_rank else None, mla_rope_dim=16)
+    if c.family == "ssm":
+        return ov(n_layers=3, d_model=128, vocab=256, ssm_state=16)
+    if c.family == "hybrid":
+        return ov(n_layers=6, d_model=128, n_heads=4, n_kv=4, head_dim=32,
+                  d_ff=256, vocab=256, ssm_state=16, hybrid_period=3)
+    if c.family == "vlm":
+        return ov(n_layers=10, d_model=64, n_heads=4, n_kv=2, head_dim=16,
+                  d_ff=128, vocab=256, cross_attn_period=5, vision_dim=48,
+                  n_img_tokens=17)
+    if c.family == "audio":
+        return ov(n_layers=2, d_model=64, n_heads=4, n_kv=4, head_dim=16,
+                  d_ff=128, vocab=256, enc_layers=2, n_audio_frames=32)
+    if c.family == "gemma":
+        return ov(n_layers=4, d_model=64, n_heads=4, n_kv=2, head_dim=16,
+                  d_ff=128, vocab=256, window=16)
+    return ov(n_layers=3, d_model=64, n_heads=4, n_kv=2, head_dim=16,
+              d_ff=128, vocab=256)
+
+
+def shape_skip_reason(arch: str, shape: str) -> str | None:
+    """None if the (arch x shape) cell runs; else why it is skipped."""
+    c = ARCHS[arch]
+    if shape == "long_500k" and c.family not in ("ssm", "hybrid"):
+        return (
+            "long_500k needs sub-quadratic attention; "
+            f"{arch} ({c.family}) has full-attention layers"
+        )
+    return None
+
+
+def applicable_shapes(arch: str):
+    return [s for s in SHAPES if shape_skip_reason(arch, s) is None]
+
+
+def input_specs(arch: str, shape: str, batch_override: int | None = None):
+    """ShapeDtypeStruct stand-ins for every model input of the cell.
+
+    train/prefill: the full token batch (+ modality embeddings).
+    decode: one token per sequence (+ pos scalar); the KV/SSM cache specs
+    come from ``init_decode_cache`` via eval_shape in the dry-run driver.
+    """
+    cfg = ARCHS[arch]
+    seq, batch, kind = SHAPES[shape]
+    if batch_override:
+        batch = batch_override
+    i32 = jnp.int32
+    if kind in ("train", "prefill"):
+        batch_specs = {"tokens": jax.ShapeDtypeStruct((batch, seq), i32)}
+        if cfg.family == "vlm":
+            batch_specs["images"] = jax.ShapeDtypeStruct(
+                (batch, cfg.n_img_tokens, cfg.vision_dim), jnp.bfloat16
+            )
+        if cfg.family == "audio":
+            batch_specs["frames"] = jax.ShapeDtypeStruct(
+                (batch, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16
+            )
+        return batch_specs
+    # decode: one new token against a seq_len-deep context
+    return {
+        "token": jax.ShapeDtypeStruct((batch,), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }

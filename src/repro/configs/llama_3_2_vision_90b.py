@@ -1,0 +1,10 @@
+"""Config module for --arch llama-3.2-vision-90b (values in repro.configs.archs)."""
+from repro.configs.archs import ARCHS, get_smoke, input_specs, applicable_shapes
+
+ARCH_ID = "llama-3.2-vision-90b"
+CONFIG = ARCHS[ARCH_ID]
+SMOKE = get_smoke(ARCH_ID)
+
+
+def specs(shape: str):
+    return input_specs(ARCH_ID, shape)

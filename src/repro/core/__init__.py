@@ -1,0 +1,25 @@
+"""Venice core: mesh topology, Algorithm-1 routing, scout engine, reservation."""
+from repro.core.topology import (
+    DOWN,
+    EJECT,
+    LEFT,
+    MeshTopology,
+    N_PORTS,
+    OPPOSITE,
+    RIGHT,
+    UP,
+    all_xy_paths,
+    build_mesh,
+    xy_path_links,
+)
+from repro.core.routing import ScoutResult, minimal_ports, scout_route_ref
+from repro.core.scout import ScoutOut, ScoutTables, make_scout_fn, make_tables, scout_route
+from repro.core.rng import seed_for_scout, xorshift32_jax, xorshift32_py
+
+__all__ = [
+    "DOWN", "EJECT", "LEFT", "MeshTopology", "N_PORTS", "OPPOSITE", "RIGHT", "UP",
+    "all_xy_paths", "build_mesh", "xy_path_links",
+    "ScoutResult", "minimal_ports", "scout_route_ref",
+    "ScoutOut", "ScoutTables", "make_scout_fn", "make_tables", "scout_route",
+    "seed_for_scout", "xorshift32_jax", "xorshift32_py",
+]

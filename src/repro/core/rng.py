@@ -1,0 +1,42 @@
+"""Deterministic PRNG shared by the reference router and the JAX scout engine.
+
+The paper uses a 2-bit LFSR inside each router for the random output-port
+tie-break (§4.3).  For testability we want the *numpy reference* and the
+*jitted JAX engine* to make bit-identical choices, so both use the same
+xorshift32 stream seeded per scout.  (A 2-bit LFSR would repeat with period 3;
+xorshift32 keeps the same "cheap hardware PRNG" spirit while letting the
+simulator draw many tie-breaks per scout without short cycles.)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_U32 = np.uint32
+MASK32 = np.uint32(0xFFFFFFFF)
+
+
+def xorshift32_py(state: int) -> int:
+    """One xorshift32 step on a python int (reference implementation)."""
+    x = state & 0xFFFFFFFF
+    x ^= (x << 13) & 0xFFFFFFFF
+    x ^= x >> 17
+    x ^= (x << 5) & 0xFFFFFFFF
+    return x & 0xFFFFFFFF
+
+
+def xorshift32_jax(state):
+    """One xorshift32 step on a jnp.uint32 (jit-safe; import-free via duck typing)."""
+    x = state
+    x = x ^ (x << 13)
+    x = x ^ (x >> 17)
+    x = x ^ (x << 5)
+    return x
+
+
+def seed_for_scout(base_seed: int, scout_id: int) -> int:
+    """Mix a base seed with a scout id into a non-zero 32-bit state (splitmix-ish)."""
+    z = (base_seed + 0x9E3779B9 * (scout_id + 1)) & 0xFFFFFFFF
+    z ^= z >> 16
+    z = (z * 0x85EBCA6B) & 0xFFFFFFFF
+    z ^= z >> 13
+    return z | 1  # never zero (xorshift fixed point)

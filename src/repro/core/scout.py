@@ -1,0 +1,231 @@
+"""Jitted scout engine — Algorithm 1 as a ``lax.while_loop`` state machine.
+
+Semantics are decision-for-decision identical to ``routing.scout_route_ref``
+(same xorshift32 tie-break stream); ``tests/test_routing.py`` enforces parity
+over thousands of randomized (mesh, occupancy, src, dst, seed) cases.
+
+The engine is written to be embedded in the SSD simulator's ``lax.scan`` over
+I/O transactions: all state is fixed-shape, the DFS is bounded by the paper's
+livelock rule (each output port of each router reservable at most once per
+scout ⇒ ≤ 4·n_nodes pushes), and the result exposes the reserved path as a
+link *mask* so the caller can commit occupancy with one vector op.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rng import xorshift32_jax
+from repro.core.topology import MeshTopology, OPPOSITE
+
+RIGHT, UP, LEFT, DOWN = 0, 1, 2, 3
+
+
+class ScoutTables(NamedTuple):
+    """Static mesh tables as device constants (closed over by jit)."""
+
+    port_link: jnp.ndarray  # [n_nodes, 4] int32, -1 = off mesh
+    port_neighbor: jnp.ndarray  # [n_nodes, 4] int32
+    cols: int
+    n_nodes: int
+    n_links: int
+    stack_cap: int
+
+
+def make_tables(topo: MeshTopology) -> ScoutTables:
+    return ScoutTables(
+        port_link=jnp.asarray(topo.port_link, dtype=jnp.int32),
+        port_neighbor=jnp.asarray(topo.port_neighbor, dtype=jnp.int32),
+        cols=topo.cols,
+        n_nodes=topo.n_nodes,
+        n_links=topo.n_links,
+        stack_cap=4 * topo.n_nodes,
+    )
+
+
+class ScoutState(NamedTuple):
+    cur: jnp.ndarray  # int32 node
+    entry: jnp.ndarray  # int32 port we arrived on (-1 at source)
+    busy: jnp.ndarray  # bool [n_links] — global occupancy + our reservations
+    tried: jnp.ndarray  # bool [n_nodes*4]
+    stack_node: jnp.ndarray  # int32 [cap]
+    stack_entry: jnp.ndarray  # int32 [cap]
+    stack_exit: jnp.ndarray  # int32 [cap]
+    stack_mis: jnp.ndarray  # bool [cap] — was the hop a misroute?
+    depth: jnp.ndarray  # int32
+    rng: jnp.ndarray  # uint32
+    steps: jnp.ndarray  # int32
+    backtracks: jnp.ndarray  # int32
+    done: jnp.ndarray  # bool
+    success: jnp.ndarray  # bool
+
+
+class ScoutOut(NamedTuple):
+    success: jnp.ndarray  # bool
+    path_mask: jnp.ndarray  # bool [n_links] — links of the reserved path
+    hops: jnp.ndarray  # int32 — path length (= reserved links)
+    steps: jnp.ndarray  # int32 — DFS steps (scout latency proxy)
+    backtracks: jnp.ndarray  # int32
+    misroutes: jnp.ndarray  # int32 — non-minimal hops on the final path
+    dst_entry_port: jnp.ndarray  # int32 — port the scout entered the dst on
+
+
+def _port_free(t: ScoutTables, st: ScoutState, node, port):
+    """port>=0, on-mesh, link unreserved, not yet tried from this node."""
+    p = jnp.maximum(port, 0)
+    lnk = t.port_link[node, p]
+    ok = (port >= 0) & (lnk >= 0)
+    ok &= ~st.busy[jnp.maximum(lnk, 0)]
+    ok &= ~st.tried[node * 4 + p]
+    return ok
+
+
+def scout_route(
+    t: ScoutTables,
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    link_busy: jnp.ndarray,
+    seed: jnp.ndarray,
+    allow_nonminimal: bool = True,
+) -> ScoutOut:
+    """Route one scout; returns the reserved path as a link mask.
+
+    ``link_busy`` (bool [n_links]) is the occupancy snapshot at the scout's
+    send time.  Purely functional — the caller commits ``path_mask``.
+    """
+    cap = t.stack_cap
+    st = ScoutState(
+        cur=jnp.asarray(src, jnp.int32),
+        entry=jnp.int32(-1),
+        busy=link_busy,
+        tried=jnp.zeros((t.n_nodes * 4,), dtype=bool),
+        stack_node=jnp.zeros((cap,), jnp.int32),
+        stack_entry=jnp.zeros((cap,), jnp.int32),
+        stack_exit=jnp.zeros((cap,), jnp.int32),
+        stack_mis=jnp.zeros((cap,), bool),
+        depth=jnp.int32(0),
+        rng=jnp.asarray(seed, jnp.uint32),
+        steps=jnp.int32(0),
+        backtracks=jnp.int32(0),
+        done=jnp.bool_(False),
+        success=jnp.bool_(False),
+    )
+    dst = jnp.asarray(dst, jnp.int32)
+
+    def cond(st: ScoutState):
+        return ~st.done
+
+    def body(st: ScoutState) -> ScoutState:
+        at_dst = st.cur == dst
+        # --- minimal ports (x candidate then y candidate, as in the ref) ---
+        diffx = dst % t.cols - st.cur % t.cols
+        diffy = dst // t.cols - st.cur // t.cols
+        px = jnp.where(diffx > 0, RIGHT, jnp.where(diffx < 0, LEFT, -1))
+        py = jnp.where(diffy > 0, UP, jnp.where(diffy < 0, DOWN, -1))
+        fmin = jnp.stack([_port_free(t, st, st.cur, px), _port_free(t, st, st.cur, py)])
+        n_min = fmin.sum()
+        # --- misroute ports: any free port except the entry (RIGHT,UP,LEFT,DOWN)
+        ports4 = jnp.arange(4, dtype=jnp.int32)
+        fmis = jax.vmap(lambda p: _port_free(t, st, st.cur, p))(ports4)
+        fmis &= ports4 != st.entry
+        if not allow_nonminimal:
+            fmis = jnp.zeros_like(fmis)
+        n_mis = fmis.sum()
+
+        use_min = n_min > 0
+        count = jnp.where(use_min, n_min, n_mis).astype(jnp.int32)
+        need_rng = (~at_dst) & (count > 1)
+        rng_next = jnp.where(need_rng, xorshift32_jax(st.rng), st.rng)
+        # Unsigned modulo to match the reference's python-int (non-negative) mod.
+        idx = (rng_next % jnp.maximum(count, 1).astype(jnp.uint32)).astype(jnp.int32)
+
+        cand_ports = jnp.concatenate([jnp.stack([px, py]), ports4])
+        cand_flags = jnp.concatenate(
+            [fmin & use_min, fmis & ~use_min]
+        )
+        cum = jnp.cumsum(cand_flags.astype(jnp.int32))
+        sel = cand_flags & (cum - 1 == idx)
+        pick = jnp.sum(jnp.where(sel, cand_ports, 0)).astype(jnp.int32)
+        is_mis = ~use_min
+        has_pick = (count > 0) & ~at_dst
+
+        def finish(s: ScoutState) -> ScoutState:
+            return s._replace(done=True, success=True)
+
+        def advance(s: ScoutState) -> ScoutState:
+            lnk = t.port_link[s.cur, pick]
+            return s._replace(
+                busy=s.busy.at[lnk].set(True),
+                tried=s.tried.at[s.cur * 4 + pick].set(True),
+                stack_node=s.stack_node.at[s.depth].set(s.cur),
+                stack_entry=s.stack_entry.at[s.depth].set(s.entry),
+                stack_exit=s.stack_exit.at[s.depth].set(pick),
+                stack_mis=s.stack_mis.at[s.depth].set(is_mis),
+                depth=s.depth + 1,
+                entry=OPPOSITE_J[pick],
+                cur=t.port_neighbor[s.cur, pick],
+            )
+
+        def backtrack(s: ScoutState) -> ScoutState:
+            def fail(s: ScoutState) -> ScoutState:
+                return s._replace(done=True, success=False)
+
+            def pop(s: ScoutState) -> ScoutState:
+                d = s.depth - 1
+                pnode = s.stack_node[d]
+                pexit = s.stack_exit[d]
+                lnk = t.port_link[pnode, pexit]
+                return s._replace(
+                    busy=s.busy.at[lnk].set(False),
+                    depth=d,
+                    cur=pnode,
+                    entry=s.stack_entry[d],
+                    backtracks=s.backtracks + 1,
+                )
+
+            return jax.lax.cond(s.depth == 0, fail, pop, s)
+
+        st = jax.lax.cond(
+            at_dst,
+            finish,
+            lambda s: jax.lax.cond(has_pick, advance, backtrack, s),
+            st,
+        )
+        return st._replace(steps=st.steps + 1, rng=rng_next)
+
+    st = jax.lax.while_loop(cond, body, st)
+    path_mask = st.busy & ~link_busy
+    in_path = jnp.arange(cap) < st.depth
+    misroutes = jnp.sum(st.stack_mis & in_path).astype(jnp.int32)
+    # Port through which the scout entered the destination (ejection handoff).
+    last = jnp.maximum(st.depth - 1, 0)
+    dst_entry = jnp.where(
+        st.depth > 0, OPPOSITE_J[st.stack_exit[last]], jnp.int32(-1)
+    )
+    return ScoutOut(
+        success=st.success,
+        path_mask=path_mask,
+        hops=st.depth,
+        steps=st.steps,
+        backtracks=st.backtracks,
+        misroutes=misroutes,
+        dst_entry_port=jnp.where(st.success, dst_entry, jnp.int32(-1)),
+    )
+
+
+OPPOSITE_J = jnp.asarray(np.asarray(OPPOSITE), dtype=jnp.int32)
+
+
+def make_scout_fn(topo: MeshTopology, allow_nonminimal: bool = True):
+    """Return a jitted ``(src, dst, link_busy, seed) -> ScoutOut`` for ``topo``."""
+    t = make_tables(topo)
+
+    @jax.jit
+    def fn(src, dst, link_busy, seed):
+        return scout_route(t, src, dst, link_busy, seed, allow_nonminimal)
+
+    return fn

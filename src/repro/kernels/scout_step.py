@@ -1,0 +1,238 @@
+"""Pallas TPU kernel: batched Algorithm-1 scout routing step.
+
+The paper's perf-critical compute is stepping many scout state machines
+against the link-occupancy map (§4.3: every in-flight I/O request runs the
+routing algorithm, and the design-space sweeps in §6.5 step millions of
+scouts).  A GPU port would chase pointers per packet; the TPU-native
+formulation instead makes every per-node table lookup a *compare-and-reduce
+against broadcast iotas* over the whole scout batch — pure VPU/MXU work with
+no gathers:
+
+  * ``port_link[cur, p]`` becomes ``one_hot(cur) · port_link`` (a [B,N]×[N,4]
+    matmul on the MXU),
+  * per-port busy/tried tests become ``(ids[...,None] == iota) & bitmap``
+    reductions over the lane dimension.
+
+Layout: scout state is packed into an int32 ``[B, 8]`` array (cur, dst,
+entry, rng, 4 pad lanes); busy is ``[B, 128]`` (112 mesh links + pad) and
+tried is ``[B, 256]`` (64 nodes x 4 ports).  The batch is tiled over the grid
+with explicit VMEM BlockSpecs; one tile's working set at B_TILE=256 is
+256x(8+128+256+128+8)x4B ≈ 541 KiB < 1 MiB VMEM in fp32 words — comfortably
+resident, with the lane dimension 128-aligned for the VPU.
+
+The kernel computes the *decision* of Algorithm 1 (minimal-adaptive with
+random tie-break, else misroute, else backtrack) plus the state advance;
+the DFS stack (backtracking memory) lives in the driver (``ops.py``), which
+is regular JAX.  ``ref.py`` is the pure-jnp oracle; tests sweep shapes,
+meshes and occupancy densities in ``interpret=True`` mode and also replay
+full DFS walks against ``repro.core.routing.scout_route_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.topology import MeshTopology
+
+RIGHT, UP, LEFT, DOWN = 0, 1, 2, 3
+LINK_PAD = 128  # lane-aligned link bitmap (8x8 mesh has 112 links)
+STATE_W = 8  # cur, dst, entry, rng, flags(out), pick(out), pad, pad
+B_TILE = 256
+
+
+def umod(x, m):
+    """Unsigned mod of the int32 bit-pattern ``x`` by ``m`` (element-wise).
+
+    x_u = hi·2^31 + lo with hi = logical msb, lo = low 31 bits, so
+    x_u mod m = (lo mod m + hi·(2^31 mod m)) mod m — all in int32.
+    """
+    hi = jax.lax.shift_right_logical(x, 31)
+    lo = x & jnp.int32(0x7FFFFFFF)
+    c = (jnp.int32(2**30) % m) * 2 % m  # 2^31 mod m without overflow
+    return (lo % m + hi * c) % m
+
+
+def xorshift32_i32(x):
+    """xorshift32 on int32 bit patterns (logical right shifts)."""
+    x = x ^ (x << 13)
+    x = x ^ jax.lax.shift_right_logical(x, 17)
+    x = x ^ (x << 5)
+    return x
+
+
+def step_math(state, busy, tried, port_link, port_neighbor, cols, allow_nonminimal):
+    """Algorithm-1 decision + state advance for a batch of scouts.
+
+    Shared by the Pallas kernel body and the jnp reference — the kernel's
+    value is the *layout/tiling*; the math must be identical by construction.
+    All inputs are int32/bool jnp arrays:
+      state [B, 8], busy [B, L], tried [B, 4N],
+      port_link [N, 4], port_neighbor [N, 4].
+    Returns (state', busy', tried').
+    """
+    cur = state[:, 0]
+    dst = state[:, 1]
+    entry = state[:, 2]
+    rng = state[:, 3]
+    B = cur.shape[0]
+    n_nodes = port_link.shape[0]
+    iota_n = jax.lax.broadcasted_iota(jnp.int32, (B, n_nodes), 1)
+    one_hot_cur = (iota_n == cur[:, None]).astype(jnp.int32)  # [B, N]
+    # MXU gathers: per-port link ids / neighbor ids for each scout's node
+    links4 = jax.lax.dot(one_hot_cur, port_link.astype(jnp.int32))  # [B, 4]
+    nbrs4 = jax.lax.dot(one_hot_cur, port_neighbor.astype(jnp.int32))
+
+    # per-port busy: does links4[b,p] index a set bit of busy[b]?
+    L = busy.shape[1]
+    iota_l = jax.lax.broadcasted_iota(jnp.int32, (B, 4, L), 2)
+    sel_l = iota_l == links4[:, :, None]
+    busy4 = jnp.any(sel_l & busy[:, None, :].astype(bool), axis=2)
+    # per-port tried: bit cur*4+p
+    T = tried.shape[1]
+    tried_idx = cur[:, None] * 4 + jax.lax.broadcasted_iota(jnp.int32, (B, 4), 1)
+    iota_t = jax.lax.broadcasted_iota(jnp.int32, (B, 4, T), 2)
+    sel_t = iota_t == tried_idx[:, :, None]
+    tried4 = jnp.any(sel_t & tried[:, None, :].astype(bool), axis=2)
+
+    free4 = (links4 >= 0) & ~busy4 & ~tried4  # [B, 4]
+
+    at_dst = cur == dst
+    diffx = dst % cols - cur % cols
+    diffy = dst // cols - cur // cols
+    px = jnp.where(diffx > 0, RIGHT, jnp.where(diffx < 0, LEFT, -1))
+    py = jnp.where(diffy > 0, UP, jnp.where(diffy < 0, DOWN, -1))
+
+    iota4 = jax.lax.broadcasted_iota(jnp.int32, (B, 4), 1)
+    fmin0 = (px[:, None] == iota4) & free4
+    fmin1 = (py[:, None] == iota4) & free4
+    fmin = jnp.stack([jnp.any(fmin0, 1), jnp.any(fmin1, 1)], axis=1)  # [B, 2]
+    n_min = jnp.sum(fmin.astype(jnp.int32), axis=1)
+    fmis = free4 & (iota4 != entry[:, None])
+    if not allow_nonminimal:
+        fmis = jnp.zeros_like(fmis)
+    n_mis = jnp.sum(fmis.astype(jnp.int32), axis=1)
+
+    use_min = n_min > 0
+    count = jnp.where(use_min, n_min, n_mis)
+    need_rng = (~at_dst) & (count > 1)
+    rng_next = jnp.where(need_rng, xorshift32_i32(rng), rng)
+    idx = umod(rng_next, jnp.maximum(count, 1))
+
+    cand_ports = jnp.concatenate([px[:, None], py[:, None], iota4], axis=1)  # [B,6]
+    cand_flags = jnp.concatenate(
+        [fmin & use_min[:, None], fmis & ~use_min[:, None]], axis=1
+    )
+    cum = jnp.cumsum(cand_flags.astype(jnp.int32), axis=1)
+    sel = cand_flags & (cum - 1 == idx[:, None])
+    pick = jnp.sum(jnp.where(sel, cand_ports, 0), axis=1)
+    has_pick = (count > 0) & ~at_dst
+
+    # advance
+    iota4b = iota4
+    link_pick = jnp.sum(jnp.where(iota4b == pick[:, None], links4, 0), axis=1)
+    nbr_pick = jnp.sum(jnp.where(iota4b == pick[:, None], nbrs4, 0), axis=1)
+    opposite = (pick + 2) % 4
+
+    new_cur = jnp.where(has_pick, nbr_pick, cur)
+    new_entry = jnp.where(has_pick, opposite, entry)
+    # flags: 0 = backtrack, 1 = advanced, 2 = at destination
+    flags = jnp.where(at_dst, 2, jnp.where(has_pick, 1, 0)).astype(jnp.int32)
+    out_pick = jnp.where(has_pick, pick, -1)
+    is_mis = (has_pick & ~use_min).astype(jnp.int32)
+
+    state_out = jnp.stack(
+        [new_cur, dst, new_entry, rng_next, flags, out_pick, is_mis,
+         jnp.where(has_pick, link_pick, 0)],
+        axis=1,
+    )
+    # set busy/tried bits for the traversed port
+    L_iota = jax.lax.broadcasted_iota(jnp.int32, busy.shape, 1)
+    busy_out = busy.astype(bool) | (
+        has_pick[:, None] & (L_iota == link_pick[:, None])
+    )
+    T_iota = jax.lax.broadcasted_iota(jnp.int32, tried.shape, 1)
+    tried_bit = cur * 4 + pick
+    tried_out = tried.astype(bool) | (
+        has_pick[:, None] & (T_iota == tried_bit[:, None])
+    )
+    return state_out, busy_out.astype(jnp.int32), tried_out.astype(jnp.int32)
+
+
+def _kernel(state_ref, busy_ref, tried_ref, tables_ref, state_o, busy_o, tried_o,
+            *, cols, n_nodes, allow_nonminimal):
+    state = state_ref[...]
+    busy = busy_ref[...]
+    tried = tried_ref[...]
+    tables = tables_ref[...]  # [N_pad, 128]: cols 0-3 port_link, 4-7 neighbor
+    port_link = tables[:n_nodes, 0:4]
+    port_neighbor = tables[:n_nodes, 4:8]
+    s, b, t = step_math(
+        state, busy, tried, port_link, port_neighbor, cols, allow_nonminimal
+    )
+    state_o[...] = s
+    busy_o[...] = b
+    tried_o[...] = t
+
+
+def pack_tables(topo: MeshTopology) -> np.ndarray:
+    n_pad = -(-topo.n_nodes // 8) * 8
+    t = np.full((n_pad, 128), -1, dtype=np.int32)
+    t[: topo.n_nodes, 0:4] = topo.port_link
+    t[: topo.n_nodes, 4:8] = topo.port_neighbor
+    return t
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cols", "n_nodes", "allow_nonminimal", "interpret", "b_tile"),
+)
+def scout_step_pallas(
+    state,
+    busy,
+    tried,
+    tables,
+    *,
+    cols: int,
+    n_nodes: int,
+    allow_nonminimal: bool = True,
+    interpret: bool = True,
+    b_tile: int = B_TILE,
+):
+    """Run one Algorithm-1 step for a batch of scouts via pallas_call.
+
+    state [B, 8] int32; busy [B, LINK_PAD] int32 (0/1); tried [B, 4*N_pad]
+    int32 (0/1); tables from ``pack_tables``.  B must be a multiple of
+    ``b_tile`` (pad with dummy scouts).
+    """
+    B = state.shape[0]
+    assert B % b_tile == 0, "pad the scout batch to a multiple of b_tile"
+    T = tried.shape[1]
+    grid = (B // b_tile,)
+    kernel = functools.partial(
+        _kernel, cols=cols, n_nodes=n_nodes, allow_nonminimal=allow_nonminimal
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b_tile, STATE_W), lambda i: (i, 0)),
+            pl.BlockSpec((b_tile, busy.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((b_tile, T), lambda i: (i, 0)),
+            pl.BlockSpec((tables.shape[0], 128), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b_tile, STATE_W), lambda i: (i, 0)),
+            pl.BlockSpec((b_tile, busy.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((b_tile, T), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, STATE_W), jnp.int32),
+            jax.ShapeDtypeStruct((B, busy.shape[1]), jnp.int32),
+            jax.ShapeDtypeStruct((B, T), jnp.int32),
+        ],
+        interpret=interpret,
+    )(state, busy, tried, tables)

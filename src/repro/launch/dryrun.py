@@ -1,0 +1,163 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count="
+    + os.environ.get("DRYRUN_DEVICES", "512")
+).strip()
+# ^ MUST run before any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (arch x input-shape) cell, lower + compile the real train/prefill/
+serve step under the production mesh — 16x16 (single pod, 256 chips) and
+2x16x16 (two pods, 512 chips) — and record:
+
+  * compiled.memory_analysis()  (fits-per-device proof)
+  * compiled.cost_analysis()    (HLO FLOPs / bytes for the roofline)
+  * collective bytes by op kind (parsed from the post-SPMD optimized HLO)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.jsonl
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, applicable_shapes, shape_skip_reason
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import cell_abstract
+from repro.roofline.analysis import collective_bytes_from_hlo, roofline_terms
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, verbose: bool = True,
+             cfg_overrides: dict | None = None, tag: str = ""):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    notes: list = []
+    fn, args, in_sh, kind = cell_abstract(arch, shape, mesh, notes,
+                                          cfg_overrides=cfg_overrides)
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": kind,
+        "devices": mesh.devices.size,
+        "sharding_notes": notes,
+        "tag": tag,
+    }
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        }
+    except Exception as e:  # pragma: no cover
+        rec["memory"] = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        rec["cost"] = {
+            k: float(v)
+            for k, v in cost.items()
+            if k in ("flops", "bytes accessed", "transcendentals")
+        }
+    except Exception as e:  # pragma: no cover
+        rec["cost"] = {"error": str(e)}
+    try:
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_bytes_from_hlo(hlo)
+        rec["hlo_bytes"] = len(hlo)
+    except Exception as e:  # pragma: no cover
+        rec["collectives"] = {"error": str(e)}
+    rec["roofline"] = roofline_terms(rec, arch)
+    if verbose:
+        mem_gb = rec.get("memory", {}).get("temp_size_in_bytes", 0) / 2**30
+        print(
+            f"[dryrun] {arch:24s} {shape:12s} {rec['mesh']:8s} OK "
+            f"lower={rec['lower_s']}s compile={rec['compile_s']}s "
+            f"temp/dev={mem_gb:.2f}GiB "
+            f"flops={rec.get('cost', {}).get('flops', 0):.3g}",
+            flush=True,
+        )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll scan-over-layers (true HLO flop counts; "
+                         "slower compiles)")
+    ap.add_argument("--override", default=None,
+                    help="JSON LMConfig overrides (perf hillclimbing), "
+                         'e.g. \'{"gqa_grouped": true}\'')
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    cells = []
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    for arch in archs:
+        shapes = (
+            applicable_shapes(arch)
+            if (args.all or not args.shape)
+            else [args.shape]
+        )
+        for shape in shapes:
+            reason = shape_skip_reason(arch, shape)
+            if reason:
+                print(f"[dryrun] {arch:24s} {shape:12s} SKIP: {reason}")
+                continue
+            cells.append((arch, shape))
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    out_f = open(args.out, "a") if args.out else None
+    failures = 0
+    for arch, shape in cells:
+        for multi in meshes:
+            try:
+                ov = dict(json.loads(args.override)) if args.override else {}
+                if args.unroll:
+                    ov["scan_unroll"] = True
+                rec = run_cell(arch, shape, multi, cfg_overrides=ov or None,
+                               tag=args.tag or ("unroll" if args.unroll else ""))
+            except Exception as e:
+                failures += 1
+                rec = {
+                    "arch": arch, "shape": shape,
+                    "mesh": "2x16x16" if multi else "16x16",
+                    "error": f"{type(e).__name__}: {e}",
+                }
+                print(f"[dryrun] {arch} {shape} {rec['mesh']} FAILED: {e}",
+                      flush=True)
+                traceback.print_exc()
+            if out_f:
+                out_f.write(json.dumps(rec) + "\n")
+                out_f.flush()
+    if out_f:
+        out_f.close()
+    print(f"[dryrun] done, {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""train_step / prefill / serve_step builders + their sharding specs.
+
+These are the exact functions the dry-run lowers and the CPU drivers run —
+one code path for both (deliverable e: the compiled artifact IS the system).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, input_specs
+from repro.models.lm import (
+    init_decode_cache,
+    init_lm,
+    lm_apply,
+    lm_decode_step,
+    lm_loss,
+)
+from repro.optim import adafactor, adamw
+from repro.parallel.sharding import batch_specs, cache_specs, param_specs
+
+# archs whose param/optimizer shards must span the whole machine
+_BIG_ARCHS = {"kimi-k2-1t-a32b", "mistral-large-123b", "llama-3.2-vision-90b"}
+
+
+def optimizer_for(arch: str):
+    # AdamW f32 moments for the 1T-param arch would need ~8 TB; Adafactor's
+    # factored second moment is the standard fix (DESIGN.md §4).
+    return adafactor() if arch == "kimi-k2-1t-a32b" else adamw()
+
+
+def fsdp_axes_for(arch: str, mesh) -> tuple:
+    axes = ("pod", "data") if arch in _BIG_ARCHS else ("data",)
+    return tuple(a for a in axes if a in mesh.shape.keys())
+
+
+def make_train_step(cfg, opt):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: lm_loss(p, cfg, batch), has_aux=True
+        )(params)
+        new_params, new_opt, gnorm = opt.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics.update(loss=loss, grad_norm=gnorm)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_train_step_accum(cfg, opt, accum: int):
+    """Gradient accumulation over ``accum`` microbatches (leading dim)."""
+
+    def train_step(params, opt_state, batch):
+        def micro(g_acc, mb):
+            (loss, _), grads = jax.value_and_grad(
+                lambda p: lm_loss(p, cfg, mb), has_aux=True
+            )(params)
+            return jax.tree_util.tree_map(jnp.add, g_acc, grads), loss
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        g_sum, losses = jax.lax.scan(micro, zeros, batch)
+        grads = jax.tree_util.tree_map(lambda g: g / accum, g_sum)
+        new_params, new_opt, gnorm = opt.update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": losses.mean(), "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill(cfg):
+    def prefill(params, batch):
+        logits, _ = lm_apply(params, cfg, batch)
+        return logits
+
+    return prefill
+
+
+def make_serve_step(cfg):
+    def serve_step(params, cache, token, pos):
+        logits, cache = lm_decode_step(params, cfg, cache, token, pos)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# abstract shapes + shardings for one (arch, shape, mesh) cell
+# ---------------------------------------------------------------------------
+
+
+def cell_abstract(arch: str, shape: str, mesh, notes: Optional[list] = None,
+                  cfg_overrides: Optional[dict] = None):
+    """Returns (fn, args_shape_tree, in_shardings, kind) ready to lower."""
+    import dataclasses
+
+    cfg = get_config(arch)
+    seq, batch, kind = SHAPES[shape]
+    fsdp = fsdp_axes_for(arch, mesh)
+    bax = tuple(a for a in ("pod", "data") if a in mesh.shape.keys())
+    nb = int(np.prod([mesh.shape[a] for a in bax])) if bax else 1
+    if batch % nb != 0:
+        bax = ()
+    overrides = dict(cfg_overrides or {})
+    opt_name = overrides.pop("__optimizer__", None)  # perf-iteration knob
+    cfg = dataclasses.replace(cfg, batch_axes=bax, **overrides)
+
+    params_shape = jax.eval_shape(
+        functools.partial(init_lm, cfg=cfg), jax.random.PRNGKey(0)
+    )
+    pspecs = param_specs(mesh, params_shape, fsdp, notes)
+    psh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), pspecs)
+
+    if kind == "train":
+        opt = adafactor() if opt_name == "adafactor" else optimizer_for(arch)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        ospecs = param_specs(mesh, opt_shape, fsdp, notes)
+        osh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), ospecs)
+        bshape = input_specs(arch, shape)
+        bspecs = batch_specs(mesh, bshape, notes)
+        bsh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), bspecs)
+        fn = make_train_step(cfg, opt)
+        return fn, (params_shape, opt_shape, bshape), (psh, osh, bsh), kind
+
+    if kind == "prefill":
+        bshape = input_specs(arch, shape)
+        bspecs = batch_specs(mesh, bshape, notes)
+        bsh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), bspecs)
+        fn = make_prefill(cfg)
+        return fn, (params_shape, bshape), (psh, bsh), kind
+
+    # decode
+    cache_shape = jax.eval_shape(
+        lambda: init_decode_cache(cfg, batch, seq)
+    )
+    cspecs = cache_specs(mesh, cache_shape, seq_shard=(shape == "long_500k"),
+                         notes=notes)
+    csh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), cspecs)
+    tok_shape = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    pos_shape = jax.ShapeDtypeStruct((), jnp.int32)
+    bax = tuple(a for a in ("pod", "data") if a in mesh.shape.keys())
+    tok_spec = P(bax if len(bax) > 1 else (bax[0] if bax else None))
+    if batch % max(
+        1, int(jnp.prod(jnp.array([mesh.shape[a] for a in bax])))
+    ) != 0:
+        tok_spec = P()
+    tsh = NamedSharding(mesh, tok_spec)
+    fn = make_serve_step(cfg)
+    return (
+        fn,
+        (params_shape, cache_shape, tok_shape, pos_shape),
+        (psh, csh, tsh, NamedSharding(mesh, P())),
+        kind,
+    )

@@ -1,0 +1,32 @@
+"""LM substrate: functional JAX model definitions for the assigned archs.
+
+Everything is plain pytrees + pure functions (init/apply), dtype-explicit,
+with ``lax.scan`` over (groups of) layers so a 100-layer model compiles as
+one program.  Decode paths carry explicit KV / SSM-state caches.
+"""
+from repro.models.layers import (
+    ModelDims,
+    attention,
+    attention_decode,
+    init_attention,
+    init_mlp,
+    init_rmsnorm,
+    mlp,
+    rmsnorm,
+    rope,
+)
+from repro.models.lm import (
+    LMConfig,
+    init_lm,
+    lm_apply,
+    lm_decode_step,
+    lm_loss,
+    init_decode_cache,
+)
+
+__all__ = [
+    "ModelDims", "attention", "attention_decode", "init_attention",
+    "init_mlp", "init_rmsnorm", "mlp", "rmsnorm", "rope",
+    "LMConfig", "init_lm", "lm_apply", "lm_decode_step", "lm_loss",
+    "init_decode_cache",
+]

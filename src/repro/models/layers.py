@@ -1,0 +1,319 @@
+"""Core transformer building blocks (functional, dtype-explicit).
+
+Conventions: params are nested dicts of jnp arrays; ``init_*`` take an
+``rng`` and dims; ``apply`` functions are pure.  Activations flow in
+``cfg.dtype`` (bf16 for dry-runs, f32 for CPU smoke tests); params are
+created in ``param_dtype``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDims:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    d_ff: int
+    qkv_bias: bool = False
+    window: Optional[int] = None  # sliding-window attention (gemma local)
+    softcap: Optional[float] = None  # logit soft-capping (gemma)
+    rope_theta: float = 10000.0
+    mlp_act: str = "silu"  # silu (swiglu) | gelu (geglu) | gelu_mlp (whisper)
+    # §Perf hillclimb: grouped-query attention einsum — contract kv heads
+    # directly ([B,S,K,G,D] x [B,T,K,D]) instead of materializing the
+    # H-expanded K/V (whose jnp.repeat forces a reshard of sharded caches)
+    gqa_grouped: bool = False
+    # MLA (deepseek): kv low-rank compression
+    mla_kv_rank: Optional[int] = None
+    mla_rope_dim: int = 64
+
+
+def _dense(rng, in_dim, out_dim, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(rng, (in_dim, out_dim), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x, positions, theta=10000.0):
+    """Rotary embedding. x [..., S, H, D], positions [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]  # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA / MLA)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(rng, dims: ModelDims, dtype):
+    ks = jax.random.split(rng, 8)
+    d, H, K, hd = dims.d_model, dims.n_heads, dims.n_kv, dims.head_dim
+    if dims.mla_kv_rank:  # DeepSeek MLA
+        r, rd = dims.mla_kv_rank, dims.mla_rope_dim
+        p = {
+            "wq": _dense(ks[0], d, H * (hd + rd), dtype),
+            "w_dkv": _dense(ks[1], d, r, dtype),
+            "w_kr": _dense(ks[2], d, rd, dtype),  # shared rope key
+            "w_uk": _dense(ks[3], r, H * hd, dtype),
+            "w_uv": _dense(ks[4], r, H * hd, dtype),
+            "wo": _dense(ks[5], H * hd, d, dtype),
+            "norm_ckv": init_rmsnorm(r, dtype),
+        }
+        return p
+    p = {
+        "wq": _dense(ks[0], d, H * hd, dtype),
+        "wk": _dense(ks[1], d, K * hd, dtype),
+        "wv": _dense(ks[2], d, K * hd, dtype),
+        "wo": _dense(ks[3], H * hd, d, dtype),
+    }
+    if dims.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((K * hd,), dtype)
+        p["bv"] = jnp.zeros((K * hd,), dtype)
+    return p
+
+
+def _mask_block(Sq, T, q0, causal, window):
+    """[Sq, T] additive mask for a query block starting at position q0."""
+    qi = jnp.arange(Sq)[:, None] + q0
+    kj = jnp.arange(T)[None, :]
+    ok = jnp.ones((Sq, T), bool)
+    if causal:
+        ok &= kj <= qi
+    if window is not None:
+        ok &= kj > qi - window
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def _sdpa_block(q, k, v, softcap, causal, window, q0):
+    """q [B,Sq,H,D], k/v [B,T,Hk,D] with Hk == H (pre-expanded) or Hk == K
+    (grouped GQA: contract kv heads directly, no materialized expansion)."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    mask = _mask_block(Sq, k.shape[1], q0, causal, window)
+    if K != H:  # grouped path
+        G = H // K
+        qg = q.reshape(B, Sq, K, G, D)
+        logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+        logits = logits * scale
+        if softcap:
+            logits = jnp.tanh(logits / softcap) * softcap
+        logits = logits + mask
+        w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+        return out.reshape(B, Sq, H, v.shape[-1])
+    logits = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) * scale
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    logits = logits + mask
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthd->bshd", w, v)
+
+
+Q_CHUNK = 512  # flash-style query chunking threshold / block size
+
+
+def _sdpa(q, k, v, softcap, causal=True, window=None):
+    """Memory-aware SDPA: for long sequences, scan over query chunks so the
+    peak logits buffer is [B,H,Q_CHUNK,T] instead of [B,H,S,T] (and the mask
+    is built per block — never a full [S,T] tensor).  The scan body is
+    rematerialized in the backward pass."""
+    B, S, H, D = q.shape
+    Dv = v.shape[-1]  # may differ from D (MLA: q/k 192, v 128)
+    if S <= Q_CHUNK or S % Q_CHUNK != 0:
+        return _sdpa_block(q, k, v, softcap, causal, window, 0)
+    n = S // Q_CHUNK
+    qc = q.reshape(B, n, Q_CHUNK, H, D).transpose(1, 0, 2, 3, 4)
+
+    def body(_, xs):
+        qi, i = xs
+        o = _sdpa_block(qi, k, v, softcap, causal, window, i * Q_CHUNK)
+        return None, o
+
+    body = jax.checkpoint(body)
+    _, out = jax.lax.scan(body, None, (qc, jnp.arange(n)))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, Dv)
+
+
+def _expand_kv(k, n_heads):
+    """[B,T,K,D] -> [B,T,H,D] by repeating each kv head H/K times."""
+    B, T, K, D = k.shape
+    rep = n_heads // K
+    return jnp.repeat(k, rep, axis=2) if rep > 1 else k
+
+
+def attention(p, dims: ModelDims, x, positions, cross_kv=None):
+    """Full (training / prefill) attention. x [B,S,d].
+
+    ``cross_kv``: (k_src, v_src) activations [B,T,d_src] for cross-attention
+    (whisper decoder, VLM image layers) — no causal mask in that case.
+    """
+    B, S, d = x.shape
+    H, hd = dims.n_heads, dims.head_dim
+    if dims.mla_kv_rank:
+        return _mla_attention(p, dims, x, positions)
+    q = x @ p["wq"]
+    if dims.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(B, S, H, hd)
+    if cross_kv is None:
+        k = x @ p["wk"]
+        v = x @ p["wv"]
+        if dims.qkv_bias:
+            k, v = k + p["bk"], v + p["bv"]
+        k = k.reshape(B, S, dims.n_kv, hd)
+        v = v.reshape(B, S, dims.n_kv, hd)
+        q = rope(q, positions, dims.rope_theta)
+        k = rope(k, positions, dims.rope_theta)
+        causal, window = True, dims.window
+    else:
+        src_k, src_v = cross_kv
+        T = src_k.shape[1]
+        k = (src_k @ p["wk"]).reshape(B, T, dims.n_kv, hd)
+        v = (src_v @ p["wv"]).reshape(B, T, dims.n_kv, hd)
+        causal, window = False, None
+    if not dims.gqa_grouped:
+        k, v = _expand_kv(k, H), _expand_kv(v, H)
+    out = _sdpa(q, k, v, dims.softcap, causal=causal, window=window)
+    return out.reshape(B, S, H * hd) @ p["wo"]
+
+
+def _mla_attention(p, dims: ModelDims, x, positions):
+    """DeepSeek-V2 Multi-head Latent Attention (training/prefill)."""
+    B, S, d = x.shape
+    H, hd, rd = dims.n_heads, dims.head_dim, dims.mla_rope_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd + rd)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = rope(q_rope, positions, dims.rope_theta)
+    c_kv = rmsnorm(p["norm_ckv"], x @ p["w_dkv"])  # [B,S,r]
+    k_rope = rope((x @ p["w_kr"])[:, :, None, :], positions, dims.rope_theta)
+    k_nope = (c_kv @ p["w_uk"]).reshape(B, S, H, hd)
+    v = (c_kv @ p["w_uv"]).reshape(B, S, H, hd)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, rd))], -1)
+    qfull = jnp.concatenate([q_nope, q_rope], -1)
+    out = _sdpa(qfull, k, v, dims.softcap, causal=True)
+    return out.reshape(B, S, H * hd) @ p["wo"]
+
+
+# --- decode (KV cache) ------------------------------------------------------
+
+
+def init_kv_cache(dims: ModelDims, B, S_max, dtype):
+    if dims.mla_kv_rank:
+        return {
+            "ckv": jnp.zeros((B, S_max, dims.mla_kv_rank), dtype),
+            "kr": jnp.zeros((B, S_max, dims.mla_rope_dim), dtype),
+        }
+    return {
+        "k": jnp.zeros((B, S_max, dims.n_kv, dims.head_dim), dtype),
+        "v": jnp.zeros((B, S_max, dims.n_kv, dims.head_dim), dtype),
+    }
+
+
+def attention_decode(p, dims: ModelDims, x, cache, pos):
+    """One-token decode. x [B,1,d]; pos scalar int32 (current index);
+    cache holds S_max entries (only [0, pos) + the new one are live)."""
+    B = x.shape[0]
+    H, hd = dims.n_heads, dims.head_dim
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    if dims.mla_kv_rank:
+        rd = dims.mla_rope_dim
+        q = (x @ p["wq"]).reshape(B, 1, H, hd + rd)
+        q_nope, q_rope = q[..., :hd], q[..., hd:]
+        q_rope = rope(q_rope, positions, dims.rope_theta)
+        c_new = rmsnorm(p["norm_ckv"], x @ p["w_dkv"])  # [B,1,r]
+        kr_new = rope((x @ p["w_kr"])[:, :, None, :], positions, dims.rope_theta)
+        cache = {
+            "ckv": jax.lax.dynamic_update_slice(
+                cache["ckv"], c_new.astype(cache["ckv"].dtype), (0, pos, 0)
+            ),
+            "kr": jax.lax.dynamic_update_slice(
+                cache["kr"], kr_new[:, :, 0].astype(cache["kr"].dtype), (0, pos, 0)
+            ),
+        }
+        S_max = cache["ckv"].shape[1]
+        # baseline: expand keys/values out of the latent cache (correct but
+        # re-materializes K/V; the matrix-absorbed form that keeps attention
+        # entirely in the rank-r latent space is a §Perf hillclimb iteration)
+        k_nope = (cache["ckv"] @ p["w_uk"]).reshape(B, S_max, H, hd)
+        v = (cache["ckv"] @ p["w_uv"]).reshape(B, S_max, H, hd)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(cache["kr"][:, :, None, :], (B, S_max, H, rd))],
+            -1,
+        )
+        qfull = jnp.concatenate([q_nope, q_rope], -1)
+        out = _sdpa_block(qfull, k, v, dims.softcap, True, None, pos)
+        return out.reshape(B, 1, H * hd) @ p["wo"], cache
+
+    q = x @ p["wq"]
+    k_new = x @ p["wk"]
+    v_new = x @ p["wv"]
+    if dims.qkv_bias:
+        q, k_new, v_new = q + p["bq"], k_new + p["bk"], v_new + p["bv"]
+    q = rope(q.reshape(B, 1, H, hd), positions, dims.rope_theta)
+    k_new = rope(k_new.reshape(B, 1, dims.n_kv, hd), positions, dims.rope_theta)
+    v_new = v_new.reshape(B, 1, dims.n_kv, hd)
+    cache = {
+        "k": jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, pos, 0, 0)
+        ),
+        "v": jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, pos, 0, 0)
+        ),
+    }
+    kc, vc = cache["k"].astype(q.dtype), cache["v"].astype(q.dtype)
+    if not dims.gqa_grouped:
+        kc, vc = _expand_kv(kc, H), _expand_kv(vc, H)
+    out = _sdpa_block(q, kc, vc, dims.softcap, True, dims.window, pos)
+    return out.reshape(B, 1, H * hd) @ p["wo"], cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(rng, dims: ModelDims, dtype):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    d, ff = dims.d_model, dims.d_ff
+    if dims.mlp_act == "gelu_mlp":  # plain 2-layer MLP (whisper)
+        return {"w1": _dense(k1, d, ff, dtype), "w2": _dense(k2, ff, d, dtype)}
+    return {
+        "wg": _dense(k1, d, ff, dtype),
+        "wu": _dense(k2, d, ff, dtype),
+        "wd": _dense(k3, ff, d, dtype),
+    }
+
+
+def mlp(p, dims: ModelDims, x):
+    if dims.mlp_act == "gelu_mlp":
+        return jax.nn.gelu(x @ p["w1"]) @ p["w2"]
+    act = jax.nn.silu if dims.mlp_act == "silu" else jax.nn.gelu
+    return (act(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]

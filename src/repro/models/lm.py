@@ -1,0 +1,639 @@
+"""Architecture assembly for the 10 assigned archs (6 families).
+
+One ``LMConfig`` describes any of: dense decoder (qwen2 / mistral-large /
+granite3), alternating local-global w/ softcap (gemma2), MoE with MLA or GQA
+(deepseek-v2-lite, kimi-k2), pure SSM (mamba2), hybrid SSM + weight-shared
+attention block (zamba2), cross-attention VLM backbone (llama-3.2-vision,
+patch embeddings stubbed per the assignment) and enc-dec audio backbone
+(whisper, conv frontend stubbed).
+
+Layers are grouped so every stack is a homogeneous ``lax.scan``:
+  * gemma2 scans over (local, global) layer *pairs*;
+  * deepseek/kimi keep the first dense-MLP layer explicit and scan the MoE
+    layers;
+  * zamba2 scans mamba layers and applies the weight-tied shared attention
+    block every ``hybrid_period`` layers (closure over shared params);
+  * the VLM scans groups of (cross_attn_period-1 self + 1 cross) layers.
+Remat (``jax.checkpoint``) wraps each scanned group for training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import (
+    ModelDims,
+    _dense,
+    attention,
+    attention_decode,
+    init_attention,
+    init_kv_cache,
+    init_mlp,
+    init_rmsnorm,
+    mlp,
+    rmsnorm,
+)
+from repro.models.mamba import (
+    MambaDims,
+    init_mamba2,
+    init_mamba2_cache,
+    mamba2_apply,
+    mamba2_step,
+)
+from repro.models.moe import MoEDims, init_moe, moe_apply
+from jax.sharding import PartitionSpec as _P
+
+
+def _constrain_batch(cfg, h):
+    """Pin the activation batch dim to the data axes (scan-carry sharding).
+    With ``seq_parallel`` (Megatron-SP, §Perf): additionally shard the
+    sequence dim over "model" at block boundaries, turning each TP psum into
+    reduce-scatter + all-gather (half the wire bytes on the dominant
+    activation collectives)."""
+    if not cfg.batch_axes or h.shape[0] == 1:
+        return h
+    b = cfg.batch_axes if len(cfg.batch_axes) > 1 else cfg.batch_axes[0]
+    seq = "model" if (cfg.seq_parallel and h.ndim == 3
+                      and h.shape[1] % 16 == 0) else None
+    return jax.lax.with_sharding_constraint(
+        h, _P(*((b, seq) + (None,) * (h.ndim - 2)))
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    family: str  # dense | gemma | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    # gemma2
+    window: Optional[int] = None  # local-layer sliding window
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    # moe
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_ff: int = 0
+    moe_shared: int = 0
+    moe_first_dense: int = 0  # leading dense-MLP layers
+    moe_ep_constrain: bool = False  # §Perf: pin EP dispatch shardings
+    # mla
+    mla_kv_rank: Optional[int] = None
+    mla_rope_dim: int = 64
+    # ssm / hybrid
+    ssm_state: int = 0
+    hybrid_period: int = 0  # zamba: shared attn block every k layers
+    ssm_chunk: int = 64
+    ssm_bf16: bool = False  # §Perf: bf16 intra-chunk SSD tensors
+    # vlm
+    cross_attn_period: int = 0  # every k-th layer is cross-attention
+    vision_dim: int = 0
+    n_img_tokens: int = 0
+    # audio (enc-dec)
+    enc_layers: int = 0
+    n_audio_frames: int = 0
+    # numerics
+    dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+    remat: bool = True
+    gqa_grouped: bool = True  # §Perf H2 (confirmed win): grouped GQA einsum
+    seq_parallel: bool = False  # §Perf: shard S over "model" at block edges
+    # dry-run/roofline: unroll scan-over-layers so XLA cost analysis counts
+    # every layer (a `while` body is otherwise costed once)
+    scan_unroll: int = 1
+    # mesh axis names carrying the batch dim; when set, activations get
+    # explicit with_sharding_constraint (sharding propagation does not reach
+    # scan carries reliably)
+    batch_axes: tuple = ()
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def dims(self, window: Optional[int] = None, cross: bool = False) -> ModelDims:
+        return ModelDims(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv=self.n_kv,
+            head_dim=self.hd,
+            d_ff=self.d_ff,
+            qkv_bias=self.qkv_bias,
+            window=window,
+            softcap=self.attn_softcap,
+            rope_theta=self.rope_theta,
+            mlp_act="gelu" if self.family == "gemma" else (
+                "gelu_mlp" if self.family == "audio" else "silu"),
+            mla_kv_rank=self.mla_kv_rank,
+            mla_rope_dim=self.mla_rope_dim,
+            gqa_grouped=self.gqa_grouped,
+        )
+
+    def moe_dims(self) -> MoEDims:
+        return MoEDims(
+            d_model=self.d_model,
+            d_ff_expert=self.moe_ff,
+            n_experts=self.moe_experts,
+            top_k=self.moe_top_k,
+            n_shared=self.moe_shared,
+            d_ff_shared=self.moe_shared * self.moe_ff if self.moe_shared else None,
+            ep_batch_axes=self.batch_axes if self.moe_ep_constrain else (),
+        )
+
+    def mamba_dims(self) -> MambaDims:
+        return MambaDims(d_model=self.d_model, d_state=self.ssm_state,
+                         chunk=self.ssm_chunk, ssd_bf16=self.ssm_bf16)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _init_attn_block(rng, cfg: LMConfig, window=None, moe=False, cross=False):
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    dims = cfg.dims(window)
+    p = {
+        "ln1": init_rmsnorm(cfg.d_model, cfg.param_dtype),
+        "attn": init_attention(k1, dims, cfg.param_dtype),
+        "ln2": init_rmsnorm(cfg.d_model, cfg.param_dtype),
+    }
+    if moe:
+        p["moe"] = init_moe(k2, cfg.moe_dims(), cfg.param_dtype)
+    else:
+        p["mlp"] = init_mlp(k3, dims, cfg.param_dtype)
+    if cross:
+        p["ln_x"] = init_rmsnorm(cfg.d_model, cfg.param_dtype)
+        p["xattn"] = init_attention(k4, cfg.dims(), cfg.param_dtype)
+        p["gate"] = jnp.zeros((1,), cfg.param_dtype)
+    return p
+
+
+def _attn_block(p, cfg: LMConfig, h, positions, window=None, moe=False,
+                cross_src=None):
+    """Pre-norm block.  Cross-attention layers (VLM image layers, whisper-
+    style fused decoder blocks) gate the cross path; VLM cross layers replace
+    self-attention entirely (Llama-3.2-Vision layout)."""
+    dims = cfg.dims(window)
+    aux = jnp.float32(0.0)
+    if cross_src is None or cfg.family == "audio":
+        h = h + attention(p["attn"], dims, rmsnorm(p["ln1"], h), positions)
+    if cross_src is not None:
+        x = attention(
+            p["xattn"], cfg.dims(), rmsnorm(p["ln_x"], h), positions,
+            cross_kv=(cross_src, cross_src),
+        )
+        h = h + jnp.tanh(p["gate"].astype(h.dtype)) * x
+    if moe:
+        y, aux = moe_apply(p["moe"], cfg.moe_dims(), rmsnorm(p["ln2"], h))
+        h = h + y
+    else:
+        h = h + mlp(p["mlp"], dims, rmsnorm(p["ln2"], h))
+    return h, aux
+
+
+def _maybe_remat(cfg, f):
+    return jax.checkpoint(f) if cfg.remat else f
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _stacked(rng, n, init_fn):
+    return jax.vmap(init_fn)(jax.random.split(rng, n))
+
+
+def init_lm(rng, cfg: LMConfig) -> Dict:
+    ks = jax.random.split(rng, 10)
+    p: Dict[str, Any] = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model), jnp.float32)
+                  * 0.02).astype(cfg.param_dtype),
+        "ln_f": init_rmsnorm(cfg.d_model, cfg.param_dtype),
+    }
+    fam = cfg.family
+    if fam in ("dense",):
+        p["layers"] = _stacked(ks[1], cfg.n_layers,
+                               lambda k: _init_attn_block(k, cfg))
+    elif fam == "gemma":
+        assert cfg.n_layers % 2 == 0
+        p["pairs"] = _stacked(
+            ks[1], cfg.n_layers // 2,
+            lambda k: {
+                "local": _init_attn_block(jax.random.fold_in(k, 0), cfg,
+                                          window=cfg.window),
+                "global": _init_attn_block(jax.random.fold_in(k, 1), cfg),
+            },
+        )
+    elif fam == "moe":
+        nd = cfg.moe_first_dense
+        p["first"] = _stacked(ks[1], nd, lambda k: _init_attn_block(k, cfg))
+        p["layers"] = _stacked(ks[2], cfg.n_layers - nd,
+                               lambda k: _init_attn_block(k, cfg, moe=True))
+    elif fam == "ssm":
+        md = cfg.mamba_dims()
+        p["layers"] = _stacked(
+            ks[1], cfg.n_layers,
+            lambda k: {"ln": init_rmsnorm(cfg.d_model, cfg.param_dtype),
+                       "mamba": init_mamba2(k, md, cfg.param_dtype)},
+        )
+    elif fam == "hybrid":
+        md = cfg.mamba_dims()
+        p["layers"] = _stacked(
+            ks[1], cfg.n_layers,
+            lambda k: {"ln": init_rmsnorm(cfg.d_model, cfg.param_dtype),
+                       "mamba": init_mamba2(k, md, cfg.param_dtype)},
+        )
+        p["shared"] = _init_attn_block(ks[2], cfg)  # weight-tied attn block
+    elif fam == "vlm":
+        g = cfg.cross_attn_period
+        assert cfg.n_layers % g == 0
+        p["groups"] = _stacked(
+            ks[1], cfg.n_layers // g,
+            lambda k: {
+                "selfs": _stacked(jax.random.fold_in(k, 0), g - 1,
+                                  lambda kk: _init_attn_block(kk, cfg)),
+                "cross": _init_attn_block(jax.random.fold_in(k, 1), cfg,
+                                          cross=True),
+            },
+        )
+        p["img_proj"] = _dense(ks[3], cfg.vision_dim, cfg.d_model,
+                               cfg.param_dtype)
+    elif fam == "audio":
+        p["enc_layers"] = _stacked(ks[1], cfg.enc_layers,
+                                   lambda k: _init_attn_block(k, cfg))
+        p["enc_ln"] = init_rmsnorm(cfg.d_model, cfg.param_dtype)
+        p["dec_layers"] = _stacked(
+            ks[2], cfg.n_layers,
+            lambda k: _init_attn_block(k, cfg, cross=True))
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _embed(p, cfg: LMConfig, tokens):
+    h = p["embed"][tokens].astype(cfg.dtype)
+    if cfg.family == "gemma":
+        h = h * jnp.asarray(np.sqrt(cfg.d_model), cfg.dtype)
+    return h
+
+
+def _unembed(p, cfg: LMConfig, h):
+    h = rmsnorm(p["ln_f"], h)
+    logits = h @ p["embed"].T.astype(cfg.dtype)
+    if cfg.final_softcap:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    return logits
+
+
+def _encode_audio(p, cfg: LMConfig, frames):
+    """Encoder over precomputed frame embeddings (conv frontend stubbed)."""
+    h = frames.astype(cfg.dtype)
+    B, T, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    dims = cfg.dims()
+
+    def enc_block(h, lp):
+        h = _constrain_batch(cfg, h)
+        hn = rmsnorm(lp["ln1"], h)
+        # bidirectional self-attention: zero mask
+        att = attention(lp["attn"], dims, hn, positions, cross_kv=(hn, hn))
+        h = h + att
+        h = h + mlp(lp["mlp"], dims, rmsnorm(lp["ln2"], h))
+        return h, None
+
+    h, _ = jax.lax.scan(_maybe_remat(cfg, enc_block), h, p["enc_layers"], unroll=cfg.scan_unroll)
+    return rmsnorm(p["enc_ln"], h)
+
+
+def lm_apply(params, cfg: LMConfig, batch) -> jnp.ndarray:
+    """Full forward to logits.  ``batch``: tokens [B,S] (+ img / frames)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = _embed(params, cfg, tokens)
+    h = _constrain_batch(cfg, h)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    fam = cfg.family
+    aux_total = jnp.float32(0.0)
+
+    if fam == "dense":
+        def block(h, lp):
+            h = _constrain_batch(cfg, h)
+            h, _ = _attn_block(lp, cfg, h, positions)
+            return h, None
+        h, _ = jax.lax.scan(_maybe_remat(cfg, block), h, params["layers"], unroll=cfg.scan_unroll)
+
+    elif fam == "gemma":
+        def pair(h, lp):
+            h = _constrain_batch(cfg, h)
+            h, _ = _attn_block(lp["local"], cfg, h, positions, window=cfg.window)
+            h, _ = _attn_block(lp["global"], cfg, h, positions)
+            return h, None
+        h, _ = jax.lax.scan(_maybe_remat(cfg, pair), h, params["pairs"], unroll=cfg.scan_unroll)
+
+    elif fam == "moe":
+        def dense_block(h, lp):
+            h, _ = _attn_block(lp, cfg, h, positions)
+            return h, None
+        h, _ = jax.lax.scan(dense_block, h, params["first"], unroll=cfg.scan_unroll)
+
+        def moe_block(h, lp):
+            h = _constrain_batch(cfg, h)
+            h, aux = _attn_block(lp, cfg, h, positions, moe=True)
+            return h, aux
+        h, auxs = jax.lax.scan(_maybe_remat(cfg, moe_block), h, params["layers"], unroll=cfg.scan_unroll)
+        aux_total = auxs.sum()
+
+    elif fam in ("ssm", "hybrid"):
+        md = cfg.mamba_dims()
+
+        if fam == "ssm":
+            def block(h, lp):
+                h = _constrain_batch(cfg, h)
+                h = h + mamba2_apply(lp["mamba"], md, rmsnorm(lp["ln"], h))
+                return h, None
+            h, _ = jax.lax.scan(_maybe_remat(cfg, block), h, params["layers"], unroll=cfg.scan_unroll)
+        else:
+            k = cfg.hybrid_period
+            shared = params["shared"]
+
+            def block(carry, inp):
+                h, idx = carry
+                lp = inp
+                h = _constrain_batch(cfg, h)
+                h = h + mamba2_apply(lp["mamba"], md, rmsnorm(lp["ln"], h))
+
+                def with_shared(h):
+                    out, _ = _attn_block(shared, cfg, h, positions)
+                    return out
+
+                h = jax.lax.cond((idx + 1) % k == 0, with_shared, lambda x: x, h)
+                return (h, idx + 1), None
+
+            (h, _), _ = jax.lax.scan(
+                _maybe_remat(cfg, block), (h, jnp.int32(0)), params["layers"],
+                unroll=cfg.scan_unroll,
+            )
+
+    elif fam == "vlm":
+        img = (batch["images"].astype(cfg.dtype) @ params["img_proj"])
+
+        def group(h, gp):
+            h = _constrain_batch(cfg, h)
+            g = cfg.cross_attn_period
+            for i in range(g - 1):
+                lp = jax.tree_util.tree_map(lambda a: a[i], gp["selfs"])
+                h, _ = _attn_block(lp, cfg, h, positions)
+            h, _ = _attn_block(gp["cross"], cfg, h, positions, cross_src=img)
+            return h, None
+
+        h, _ = jax.lax.scan(_maybe_remat(cfg, group), h, params["groups"], unroll=cfg.scan_unroll)
+
+    elif fam == "audio":
+        enc = _encode_audio(params, cfg, batch["frames"])
+
+        def dec_block(h, lp):
+            h = _constrain_batch(cfg, h)
+            h, _ = _attn_block(lp, cfg, h, positions, cross_src=enc)
+            return h, None
+
+        h, _ = jax.lax.scan(_maybe_remat(cfg, dec_block), h, params["dec_layers"], unroll=cfg.scan_unroll)
+
+    logits = _unembed(params, cfg, h)
+    return logits, aux_total
+
+
+def lm_loss(params, cfg: LMConfig, batch):
+    logits, aux = lm_apply(params, cfg, batch)
+    targets = batch["tokens"][:, 1:]
+    lg = logits[:, :-1]
+    # vocab-sharding-friendly cross entropy: logsumexp + one-hot contraction
+    # (both reduce over the sharded vocab axis — no gather / no [B,S,V] f32
+    # materialization, XLA fuses the one_hot into the dot)
+    lse = jax.scipy.special.logsumexp(lg.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(targets, lg.shape[-1], dtype=lg.dtype)
+    correct = jnp.einsum("bsv,bsv->bs", onehot, lg).astype(jnp.float32)
+    nll = lse - correct
+    loss = nll.mean() + 0.01 * aux
+    return loss, {"nll": nll.mean(), "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def init_decode_cache(cfg: LMConfig, B: int, S_max: int):
+    """Cache pytree for one-token decode with a pre-existing context."""
+    fam = cfg.family
+    cdt = cfg.dtype
+
+    def kv(window=None):
+        return init_kv_cache(cfg.dims(window), B, S_max, cdt)
+
+    if fam == "dense":
+        return {"layers": jax.vmap(lambda _: kv())(jnp.arange(cfg.n_layers))}
+    if fam == "gemma":
+        n = cfg.n_layers // 2
+        return {
+            "pairs": jax.vmap(lambda _: {"local": kv(cfg.window), "global": kv()})(
+                jnp.arange(n)
+            )
+        }
+    if fam == "moe":
+        return {
+            "first": jax.vmap(lambda _: kv())(jnp.arange(cfg.moe_first_dense)),
+            "layers": jax.vmap(lambda _: kv())(
+                jnp.arange(cfg.n_layers - cfg.moe_first_dense)
+            ),
+        }
+    if fam == "ssm":
+        md = cfg.mamba_dims()
+        return {
+            "layers": jax.vmap(lambda _: init_mamba2_cache(md, B, cdt))(
+                jnp.arange(cfg.n_layers)
+            )
+        }
+    if fam == "hybrid":
+        md = cfg.mamba_dims()
+        n_shared = cfg.n_layers // cfg.hybrid_period
+        return {
+            "layers": jax.vmap(lambda _: init_mamba2_cache(md, B, cdt))(
+                jnp.arange(cfg.n_layers)
+            ),
+            "shared": jax.vmap(lambda _: kv())(jnp.arange(n_shared)),
+        }
+    if fam == "vlm":
+        g = cfg.cross_attn_period
+        return {
+            "groups": jax.vmap(
+                lambda _: {"selfs": jax.vmap(lambda __: kv())(jnp.arange(g - 1))}
+            )(jnp.arange(cfg.n_layers // g)),
+            "img": jnp.zeros((B, cfg.n_img_tokens, cfg.d_model), cdt),
+        }
+    if fam == "audio":
+        return {
+            "dec": jax.vmap(lambda _: kv())(jnp.arange(cfg.n_layers)),
+            "enc": jnp.zeros((B, cfg.n_audio_frames, cfg.d_model), cdt),
+        }
+    raise ValueError(fam)
+
+
+def _decode_block(lp, cfg, h, cache, pos, window=None, cross_src=None):
+    dims = cfg.dims(window)
+    att, cache = attention_decode(lp["attn"], dims, rmsnorm(lp["ln1"], h),
+                                  cache, pos)
+    h = h + att
+    if cross_src is not None:
+        B = h.shape[0]
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        x = attention(lp["xattn"], cfg.dims(), rmsnorm(lp["ln_x"], h),
+                      positions, cross_kv=(cross_src, cross_src))
+        h = h + jnp.tanh(lp["gate"].astype(h.dtype)) * x
+    if "moe" in lp:
+        y, _ = moe_apply(lp["moe"], cfg.moe_dims(), rmsnorm(lp["ln2"], h))
+        h = h + y
+    else:
+        h = h + mlp(lp["mlp"], dims, rmsnorm(lp["ln2"], h))
+    return h, cache
+
+
+def lm_decode_step(params, cfg: LMConfig, cache, token, pos):
+    """One decode step: token [B] int32, pos scalar -> (logits [B,V], cache)."""
+    B = token.shape[0]
+    h = _embed(params, cfg, token[:, None])
+    fam = cfg.family
+
+    if fam == "dense":
+        def step(h, xs):
+            lp, c = xs
+            h, c = _decode_block(lp, cfg, h, c, pos)
+            return h, c
+        h, new_cache = jax.lax.scan(step, h, (params["layers"], cache["layers"]))
+        cache = {"layers": new_cache}
+
+    elif fam == "gemma":
+        def step(h, xs):
+            lp, c = xs
+            h, cl = _decode_block(lp["local"], cfg, h, c["local"], pos,
+                                  window=cfg.window)
+            h, cg = _decode_block(lp["global"], cfg, h, c["global"], pos)
+            return h, {"local": cl, "global": cg}
+        h, new_cache = jax.lax.scan(step, h, (params["pairs"], cache["pairs"]))
+        cache = {"pairs": new_cache}
+
+    elif fam == "moe":
+        def step_d(h, xs):
+            lp, c = xs
+            return _decode_block(lp, cfg, h, c, pos)
+        h, cf = jax.lax.scan(step_d, h, (params["first"], cache["first"]))
+
+        def step_m(h, xs):
+            lp, c = xs
+            return _decode_block(lp, cfg, h, c, pos)
+        h, cl = jax.lax.scan(step_m, h, (params["layers"], cache["layers"]))
+        cache = {"first": cf, "layers": cl}
+
+    elif fam == "ssm":
+        md = cfg.mamba_dims()
+
+        def step(h, xs):
+            lp, c = xs
+            y, c = mamba2_step(lp["mamba"], md, rmsnorm(lp["ln"], h), c)
+            return h + y, c
+        h, new_cache = jax.lax.scan(step, h, (params["layers"], cache["layers"]))
+        cache = {"layers": new_cache}
+
+    elif fam == "hybrid":
+        md = cfg.mamba_dims()
+        k = cfg.hybrid_period
+        n_shared = cfg.n_layers // k
+        shared = params["shared"]
+
+        def step(carry, xs):
+            h, shared_caches, idx = carry
+            lp, c = xs
+            y, c = mamba2_step(lp["mamba"], md, rmsnorm(lp["ln"], h), c)
+            h = h + y
+
+            def with_shared(args):
+                h, shared_caches = args
+                si = (idx + 1) // k - 1
+                sc = jax.tree_util.tree_map(lambda a: a[si], shared_caches)
+                h, sc = _decode_block(shared, cfg, h, sc, pos)
+                shared_caches = jax.tree_util.tree_map(
+                    lambda a, b: a.at[si].set(b), shared_caches, sc
+                )
+                return h, shared_caches
+
+            h, shared_caches = jax.lax.cond(
+                (idx + 1) % k == 0, with_shared, lambda a: a, (h, shared_caches)
+            )
+            return (h, shared_caches, idx + 1), c
+
+        (h, shared_caches, _), new_layers = jax.lax.scan(
+            step, (h, cache["shared"], jnp.int32(0)),
+            (params["layers"], cache["layers"]),
+        )
+        cache = {"layers": new_layers, "shared": shared_caches}
+
+    elif fam == "vlm":
+        img = cache["img"]  # projected image tokens cached at prefill
+
+        def group(h, xs):
+            gp, gc = xs
+            g = cfg.cross_attn_period
+            new_selfs = []
+            for i in range(g - 1):
+                lp = jax.tree_util.tree_map(lambda a: a[i], gp["selfs"])
+                c = jax.tree_util.tree_map(lambda a: a[i], gc["selfs"])
+                h, c = _decode_block(lp, cfg, h, c, pos)
+                new_selfs.append(c)
+            stacked = jax.tree_util.tree_map(
+                lambda *xs_: jnp.stack(xs_), *new_selfs
+            )
+            B = h.shape[0]
+            positions = jnp.full((B, 1), pos, jnp.int32)
+            # cross layer (no self-attention — Llama-3.2-Vision layout)
+            h = h + jnp.tanh(gp["cross"]["gate"].astype(h.dtype)) * attention(
+                gp["cross"]["xattn"], cfg.dims(), rmsnorm(gp["cross"]["ln_x"], h),
+                positions, cross_kv=(img, img),
+            )
+            h = h + mlp(gp["cross"]["mlp"], cfg.dims(),
+                        rmsnorm(gp["cross"]["ln2"], h))
+            return h, {"selfs": stacked}
+
+        h, new_groups = jax.lax.scan(
+            group, h, (params["groups"], cache["groups"])
+        )
+        cache = {"groups": new_groups, "img": img}
+
+    elif fam == "audio":
+        enc = cache["enc"]
+
+        def step(h, xs):
+            lp, c = xs
+            h, c = _decode_block(lp, cfg, h, c, pos, cross_src=enc)
+            return h, c
+
+        h, new_dec = jax.lax.scan(step, h, (params["dec_layers"], cache["dec"]))
+        cache = {"dec": new_dec, "enc": enc}
+
+    logits = _unembed(params, cfg, h)
+    return logits[:, 0, :], cache

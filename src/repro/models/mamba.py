@@ -1,0 +1,241 @@
+"""Mamba2 block — SSD (state-space duality) chunked scan [arXiv:2405.21060].
+
+Layout follows the reference Mamba2: in_proj -> (z, xBC, dt); causal depthwise
+conv over xBC; scalar-per-head A; SSD recurrence over heads of dim P with
+state size N:
+
+    state_t = exp(dt_t A) * state_{t-1} + dt_t * x_t B_t^T        [P, N]
+    y_t     = state_t C_t + D x_t
+
+``mamba2_apply`` uses the chunked SSD algorithm (intra-chunk quadratic form +
+inter-chunk state scan — MXU-friendly, O(S·Q) not O(S^2)); ``mamba2_ref`` is
+the naive per-step recurrent oracle; ``mamba2_step`` is the O(1) decode step
+(this is what makes ``long_500k`` decode constant-memory for SSM archs).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import _dense, init_rmsnorm, rmsnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaDims:
+    d_model: int
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 64
+    # §Perf hillclimb: carry the intra-chunk attention-like tensors (CB,
+    # decay, dtx — the memory-roofline dominators, O(B·S·Q·h)) in bf16 with
+    # f32 accumulation; inter-chunk state stays f32
+    ssd_bf16: bool = False
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def d_xbc(self) -> int:
+        return self.d_inner + 2 * self.d_state  # x, B, C (single group)
+
+
+def init_mamba2(rng, md: MambaDims, dtype):
+    ks = jax.random.split(rng, 6)
+    d_in_proj = 2 * md.d_inner + 2 * md.d_state + md.n_heads  # z,xBC,dt
+    return {
+        "in_proj": _dense(ks[0], md.d_model, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (md.d_conv, md.d_xbc), jnp.float32)
+                   * 0.5).astype(dtype),
+        "conv_b": jnp.zeros((md.d_xbc,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, md.n_heads)).astype(jnp.float32),
+        "D": jnp.ones((md.n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((md.n_heads,), jnp.float32),
+        "norm": init_rmsnorm(md.d_inner, dtype),
+        "out_proj": _dense(ks[2], md.d_inner, md.d_model, dtype),
+    }
+
+
+def _split_in_proj(p, md: MambaDims, x):
+    proj = x @ p["in_proj"]
+    z = proj[..., : md.d_inner]
+    xbc = proj[..., md.d_inner: md.d_inner + md.d_xbc]
+    dt = proj[..., md.d_inner + md.d_xbc:]
+    return z, xbc, dt
+
+
+def _conv_full(p, md: MambaDims, xbc):
+    """Causal depthwise conv over the sequence. xbc [B,S,d_xbc]."""
+    B, S, C = xbc.shape
+    pad = jnp.pad(xbc, ((0, 0), (md.d_conv - 1, 0), (0, 0)))
+    w = p["conv_w"].astype(xbc.dtype)  # [K, C]
+    out = sum(
+        pad[:, k: k + S, :] * w[k][None, None, :] for k in range(md.d_conv)
+    )
+    return jax.nn.silu(out + p["conv_b"].astype(xbc.dtype))
+
+
+def _ssd_inputs(p, md: MambaDims, xbc_conv, dt):
+    B, S, _ = xbc_conv.shape
+    x = xbc_conv[..., : md.d_inner].reshape(B, S, md.n_heads, md.head_dim)
+    Bm = xbc_conv[..., md.d_inner: md.d_inner + md.d_state]
+    Cm = xbc_conv[..., md.d_inner + md.d_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,h]
+    A = -jnp.exp(p["A_log"])  # [h], negative
+    return x.astype(jnp.float32), Bm.astype(jnp.float32), Cm.astype(jnp.float32), dt, A
+
+
+def mamba2_ref(p, md: MambaDims, x_in):
+    """Naive O(S) recurrent oracle (f32). x_in [B,S,d_model]."""
+    z, xbc, dt = _split_in_proj(p, md, x_in)
+    xbc = _conv_full(p, md, xbc)
+    x, Bm, Cm, dt, A = _ssd_inputs(p, md, xbc, dt)
+    B, S, h, P = x.shape
+    N = md.d_state
+
+    def step(state, inp):
+        xt, bt, ct, dtt = inp  # [B,h,P], [B,N], [B,N], [B,h]
+        a = jnp.exp(dtt * A[None, :])  # [B,h]
+        state = state * a[..., None, None] + jnp.einsum(
+            "bhp,bn,bh->bhpn", xt, bt, dtt
+        )
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    state0 = jnp.zeros((B, h, P, N), jnp.float32)
+    xs = (
+        x.transpose(1, 0, 2, 3),
+        Bm.transpose(1, 0, 2),
+        Cm.transpose(1, 0, 2),
+        dt.transpose(1, 0, 2),
+    )
+    _, ys = jax.lax.scan(step, state0, xs)
+    y = ys.transpose(1, 0, 2, 3) + x * p["D"][None, None, :, None]
+    return _finish(p, md, y, z, x_in.dtype)
+
+
+def _finish(p, md: MambaDims, y, z, dtype):
+    B, S = y.shape[0], y.shape[1]
+    y = y.reshape(B, S, md.d_inner).astype(dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y)
+    return y @ p["out_proj"]
+
+
+def mamba2_apply(p, md: MambaDims, x_in):
+    """Chunked SSD (training/prefill). x_in [B,S,d_model]; sequences not
+    divisible by the chunk are right-padded (causal — padding cannot affect
+    the sliced-back outputs)."""
+    S_in = x_in.shape[1]
+    Q = min(md.chunk, S_in)
+    pad = (-S_in) % Q
+    if pad:
+        x_in = jnp.pad(x_in, ((0, 0), (0, pad), (0, 0)))
+    z, xbc, dt = _split_in_proj(p, md, x_in)
+    xbc = _conv_full(p, md, xbc)
+    x, Bm, Cm, dt, A = _ssd_inputs(p, md, xbc, dt)
+    B, S, h, P = x.shape
+    N = md.d_state
+    C_ = S // Q
+
+    xc = x.reshape(B, C_, Q, h, P)
+    bc = Bm.reshape(B, C_, Q, N)
+    cc = Cm.reshape(B, C_, Q, N)
+    dtc = dt.reshape(B, C_, Q, h)
+
+    loga = dtc * A[None, None, None, :]  # [B,C,Q,h]
+    cum = jnp.cumsum(loga, axis=2)  # inclusive
+    dtx = xc * dtc[..., None]  # [B,C,Q,h,P]
+
+    # intra-chunk: y_i += C_i·B_j (prod_{j<k<=i} a) dt_j x_j, j<=i
+    # §Perf H1: with ssd_bf16 every O(B·S·Q·h)-sized intermediate (the
+    # memory-roofline dominators: the decay matrix, CB, M, dtx) is *born*
+    # bf16 — the small [B,C,Q,h] cumsum stays f32, matmuls accumulate f32.
+    wt = jnp.bfloat16 if md.ssd_bf16 else jnp.float32
+    cum_w = cum.astype(wt)
+    CB = jnp.einsum("bcin,bcjn->bcij", cc.astype(wt), bc.astype(wt),
+                    preferred_element_type=wt)
+    decay = jnp.exp(
+        jnp.clip(cum_w[:, :, :, None, :] - cum_w[:, :, None, :, :],
+                 -30.0, 0.0)
+    )  # [B,C,i,j,h] in wt
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    M = CB[..., None] * decay * tri[None, None, :, :, None]
+    dtx_w = (xc.astype(wt) * dtc.astype(wt)[..., None])
+    y_intra = jnp.einsum(
+        "bcijh,bcjhp->bcihp", M, dtx_w,
+        preferred_element_type=jnp.float32,
+    )
+
+    # inter-chunk: fused scan (§Perf H1).  The naive formulation first
+    # materializes ALL per-chunk states twice — S_c and prev_states, each
+    # [B,C,h,P,N] — then einsums y_inter outside the scan.  Computing S_c
+    # and y_inter *inside* the scan body keeps only one running [B,h,P,N]
+    # state live and removes ~2/3 of the inter-chunk HBM traffic
+    # (hypothesis -> confirmed in EXPERIMENTS.md §Perf).
+    decay_end = jnp.exp(jnp.clip(cum[:, :, -1:, :] - cum, -60.0, 0.0))  # [B,C,Q,h]
+    A_c = jnp.exp(jnp.clip(cum[:, :, -1, :], -60.0, 0.0))  # [B,C,h]
+    cum_exp = jnp.exp(jnp.clip(cum, -60.0, 0.0))  # [B,C,Q,h]
+
+    def scan_fn(state, inp):
+        a_c, bc_c, de_c, dtx_c, cc_c, ce_c = inp
+        # y from the state entering this chunk
+        y_c = jnp.einsum("bin,bhpn,bih->bihp", cc_c, state, ce_c)
+        s_c = jnp.einsum("bjn,bjh,bjhp->bhpn", bc_c, de_c, dtx_c)
+        new = state * a_c[..., None, None] + s_c
+        return new, y_c
+
+    state0 = jnp.zeros((B, h, P, N), jnp.float32)
+    xs = (
+        A_c.transpose(1, 0, 2),
+        bc.transpose(1, 0, 2, 3),
+        decay_end.transpose(1, 0, 2, 3),
+        dtx.transpose(1, 0, 2, 3, 4),
+        cc.transpose(1, 0, 2, 3),
+        cum_exp.transpose(1, 0, 2, 3),
+    )
+    _, y_inter = jax.lax.scan(scan_fn, state0, xs)
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4)  # [B,C,Q,h,P]
+
+    y = (y_intra + y_inter).reshape(B, S, h, P) + x * p["D"][None, None, :, None]
+    out = _finish(p, md, y, z, x_in.dtype)
+    return out[:, :S_in] if pad else out
+
+
+# --- decode -----------------------------------------------------------------
+
+
+def init_mamba2_cache(md: MambaDims, B, dtype):
+    return {
+        "conv": jnp.zeros((B, md.d_conv - 1, md.d_xbc), dtype),
+        "ssm": jnp.zeros((B, md.n_heads, md.head_dim, md.d_state), jnp.float32),
+    }
+
+
+def mamba2_step(p, md: MambaDims, x_in, cache):
+    """One-token decode. x_in [B,1,d_model] -> ([B,1,d_model], cache')."""
+    z, xbc, dt = _split_in_proj(p, md, x_in)
+    xbc1 = xbc[:, 0, :]  # [B, d_xbc]
+    window = jnp.concatenate([cache["conv"], xbc1[:, None, :]], axis=1)  # [B,K,d]
+    w = p["conv_w"].astype(xbc1.dtype)
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + p["conv_b"].astype(xbc1.dtype)
+    conv_out = jax.nn.silu(conv_out)
+
+    x, Bm, Cm, dtv, A = _ssd_inputs(p, md, conv_out[:, None, :], dt)
+    xt, bt, ct, dtt = x[:, 0], Bm[:, 0], Cm[:, 0], dtv[:, 0]
+    a = jnp.exp(dtt * A[None, :])
+    ssm = cache["ssm"] * a[..., None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", xt, bt, dtt
+    )
+    y = jnp.einsum("bhpn,bn->bhp", ssm, ct) + xt * p["D"][None, :, None]
+    out = _finish(p, md, y[:, None], z, x_in.dtype)
+    return out, {"conv": window[:, 1:, :], "ssm": ssm}

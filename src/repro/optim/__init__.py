@@ -1,0 +1,18 @@
+"""Optimizers (self-contained — no optax in this container)."""
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    adafactor,
+    clip_by_global_norm,
+    global_norm,
+)
+from repro.optim.compression import (
+    compress_int8,
+    decompress_int8,
+    error_feedback_update,
+)
+
+__all__ = [
+    "Optimizer", "adamw", "adafactor", "clip_by_global_norm", "global_norm",
+    "compress_int8", "decompress_int8", "error_feedback_update",
+]

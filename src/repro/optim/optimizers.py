@@ -1,0 +1,138 @@
+"""AdamW and Adafactor (factored second moment), with global-norm clipping.
+
+States are pytrees mirroring the params, so the same sharding specs apply
+(ZeRO-style: optimizer state lives wherever its param shard lives).  For the
+~1T-param arch AdamW's two f32 moments don't fit; Adafactor's row/col
+factored second moment is the standard answer (documented in DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]  # (grads, state, params) -> (new_params, new_state)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        jax.tree_util.tree_reduce(
+            lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))), tree, 0.0
+        )
+    )
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), tree), norm
+
+
+def adamw(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          clip_norm=1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        c = state["count"] + 1
+        b1c = 1.0 - b1 ** c.astype(jnp.float32)
+        b2c = 1.0 - b2 ** c.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            step = (m / b1c) / (jnp.sqrt(v / b2c) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            return m, v, (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        flat = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params)
+        m = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+        v = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+        new_p = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"m": m, "v": v, "count": c}, gnorm
+
+    return Optimizer(init=init, update=update)
+
+
+def adafactor(lr=None, decay=0.8, eps=1e-30, clip_norm=1.0,
+              weight_decay=0.0) -> Optimizer:
+    """Factored second-moment estimator (Shazeer & Stern 2018), no momentum.
+
+    >=2D leaves store row/col running means (memory O(n+m) instead of O(nm));
+    1D/0D leaves fall back to a full second moment.  ``lr=None`` uses the
+    paper's relative step size min(1e-2, 1/sqrt(t))."""
+
+    def init(params):
+        def st(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "f": jax.tree_util.tree_map(st, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        c = state["count"] + 1
+        rho = jnp.minimum(1e-2, 1.0 / jnp.sqrt(c.astype(jnp.float32)))
+        step_size = rho if lr is None else lr
+        d = decay
+
+        def upd(g, f, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if p.ndim >= 2:
+                vr = d * f["vr"] + (1 - d) * g2.mean(axis=-1)
+                vc = d * f["vc"] + (1 - d) * g2.mean(axis=-2)
+                denom = vr[..., :, None] * vc[..., None, :]
+                denom = denom / jnp.maximum(
+                    vr.mean(axis=-1)[..., None, None], eps
+                )
+                step = g32 * jax.lax.rsqrt(denom + eps)
+                nf = {"vr": vr, "vc": vc}
+            else:
+                v = d * f["v"] + (1 - d) * g2
+                step = g32 * jax.lax.rsqrt(v + eps)
+                nf = {"v": v}
+            # relative step size (update clipping à la Adafactor)
+            rms = jnp.sqrt(jnp.mean(jnp.square(step)) + eps)
+            step = step / jnp.maximum(1.0, rms)
+            scale = step_size * jnp.maximum(
+                jnp.sqrt(jnp.mean(jnp.square(p.astype(jnp.float32)))), 1e-3
+            )
+            newp = p.astype(jnp.float32) - scale * step
+            if weight_decay:
+                newp = newp - step_size * weight_decay * p.astype(jnp.float32)
+            return nf, newp.astype(p.dtype)
+
+        g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+        p_leaves = treedef.flatten_up_to(params)
+        is_state = lambda t: isinstance(t, dict) and ("vr" in t or "v" in t)
+        f_leaves, _ = jax.tree_util.tree_flatten(state["f"], is_leaf=is_state)
+        outs = [upd(g, f, p) for g, f, p in zip(g_leaves, f_leaves, p_leaves)]
+        nf = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+        np_ = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+        return np_, {"f": nf, "count": c}, gnorm
+
+    return Optimizer(init=init, update=update)

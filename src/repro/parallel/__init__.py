@@ -1,0 +1,12 @@
+"""Distribution: mesh-axis sharding rules (DP/FSDP/TP/EP/SP) for params,
+optimizer state, activations and decode caches."""
+from repro.parallel.sharding import (
+    batch_specs,
+    cache_specs,
+    named,
+    param_specs,
+    validate_divisible,
+)
+
+__all__ = ["batch_specs", "cache_specs", "named", "param_specs",
+           "validate_divisible"]

@@ -1,0 +1,183 @@
+"""Sharding rules: leaf-name → PartitionSpec, with divisibility fallback.
+
+Axes
+  "model"        TP/EP: attention heads, MLP ff, MoE experts, vocab
+  fsdp axes      parameter/grad sharding (ZeRO-3 style): ("data",) on one
+                 pod; ("pod","data") for the >50B archs so the param shards
+                 span the whole machine
+  batch axes     activations' leading batch dim: ("pod","data") when the pod
+                 axis exists, else ("data",)
+
+Rules are keyed on leaf *name* and matched against the TRAILING dims of the
+leaf; leading stacked-layer dims (from scan-over-layers vmapped init) are
+replicated automatically.  Every axis assignment is validated against the
+actual dim size — a non-divisible dim falls back to replication and is
+reported (never a compile failure), which is what lets one rule set cover
+all 10 archs x 4 shapes x 2 meshes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def validate_divisible(mesh: Mesh, shape, spec: P, notes=None, name="") -> P:
+    """Drop any spec axis that does not divide its dim (replicate instead)."""
+    out = []
+    for i, axis in enumerate(spec):
+        if axis is None or i >= len(shape):
+            out.append(None if i >= len(shape) else axis)
+            continue
+        size = _axis_size(mesh, axis)
+        if shape[i] % size == 0:
+            out.append(axis)
+        else:
+            out.append(None)
+            if notes is not None:
+                notes.append(
+                    f"{name}: dim {i} ({shape[i]}) not divisible by {axis}"
+                    f" ({size}) — replicated"
+                )
+    return P(*out)
+
+
+# --- parameter rules --------------------------------------------------------
+
+# leaf name -> (trailing_ndim, base spec builder(fsdp) )
+def _param_rule(name: str, ndim: int, fsdp):
+    two = {
+        "embed": ("model", fsdp),
+        "wq": (fsdp, "model"),
+        "wk": (fsdp, "model"),
+        "wv": (fsdp, "model"),
+        "wo": ("model", fsdp),
+        "wg": (fsdp, "model"),
+        "wu": (fsdp, "model"),
+        "wd": ("model", fsdp),
+        "w1": (fsdp, "model"),
+        "w2": ("model", fsdp),
+        "w_dkv": (fsdp, None),
+        "w_kr": (fsdp, None),
+        "w_uk": (None, "model"),
+        "w_uv": (None, "model"),
+        "in_proj": (fsdp, None),
+        "out_proj": (None, fsdp),
+        "img_proj": (fsdp, "model"),
+        "router": (fsdp, None),
+        "conv_w": (None, "model"),
+    }
+    three = {  # MoE expert-stacked weights: EP over "model"
+        "wg": ("model", fsdp, None),
+        "wu": ("model", fsdp, None),
+        "wd": ("model", None, fsdp),
+    }
+    one = {
+        "bq": ("model",),
+        "bk": ("model",),
+        "bv": ("model",),
+        "conv_b": ("model",),
+    }
+    if ndim >= 3 and name in three:
+        return three[name]
+    if ndim >= 2 and name in two:
+        return two[name]
+    if ndim >= 1 and name in one:
+        return one[name]
+    return ()  # replicate (norm scales, A_log, D, dt_bias, gate, ...)
+
+
+def param_specs(mesh: Mesh, params_shape, fsdp_axes: Tuple[str, ...],
+                notes: Optional[list] = None) -> Dict:
+    """tree of PartitionSpec for a params (or optimizer-state) shape tree."""
+    fsdp = tuple(a for a in fsdp_axes if a in mesh.shape.keys()) or None
+    if fsdp and len(fsdp) == 1:
+        fsdp = fsdp[0]
+
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shape = leaf.shape
+        base = _param_rule(name, len(shape), fsdp)
+        base = tuple(base[-len(shape):]) if base else ()
+        lead = (None,) * (len(shape) - len(base))
+        spec = P(*(lead + tuple(base)))
+        return validate_divisible(mesh, shape, spec, notes, name)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+# --- activation / cache rules ------------------------------------------------
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape.keys())
+
+
+def batch_specs(mesh: Mesh, batch_shape, notes=None) -> Dict:
+    """Token/modality inputs: shard dim 0 (global batch) over pod+data."""
+    b = batch_axes(mesh)
+    b = b if len(b) > 1 else (b[0] if b else None)
+
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if leaf.ndim == 0:
+            return P()
+        spec = P(*((b,) + (None,) * (leaf.ndim - 1)))
+        return validate_divisible(mesh, leaf.shape, spec, notes, f"batch.{name}")
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_shape)
+
+
+def cache_specs(mesh: Mesh, cache_shape, seq_shard: bool = False,
+                notes=None) -> Dict:
+    """Decode-cache sharding.
+
+    KV caches shard batch over pod+data and the *head_dim / latent* feature
+    dim over "model" (kv-head counts are often < the model axis, head_dim is
+    always 128-aligned).  With ``seq_shard`` (long_500k, global_batch=1) the
+    sequence dim is sharded over "data" instead of the batch — sequence
+    parallelism for the single-stream KV cache.
+    """
+    b = batch_axes(mesh)
+    b = b if len(b) > 1 else (b[0] if b else None)
+    seq_ax = "data" if (seq_shard and "data" in mesh.shape.keys()) else None
+    bat = None if seq_shard else b
+
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shape = leaf.shape
+        nd = len(shape)
+        trailing = {
+            # trailing-dims spec per leaf kind
+            "k": (bat, seq_ax, None, "model"),
+            "v": (bat, seq_ax, None, "model"),
+            "ckv": (bat, seq_ax, "model"),
+            "kr": (bat, seq_ax, None),
+            "ssm": (bat, None, "model", None),
+            "conv": (bat, None, "model"),
+            "img": (bat, None, "model"),
+            "enc": (bat, None, "model"),
+        }.get(name)
+        if trailing is None:
+            return P()
+        base = tuple(trailing[-nd:]) if nd <= len(trailing) else (
+            (None,) * (nd - len(trailing)) + tuple(trailing)
+        )
+        spec = P(*base)
+        return validate_divisible(mesh, shape, spec, notes, f"cache.{name}")
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)

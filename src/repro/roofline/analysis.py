@@ -1,0 +1,153 @@
+"""Three-term roofline from the dry-run's compiled artifact (§Roofline).
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = wire_bytes_per_device / link_bw
+
+Sources: ``compiled.cost_analysis()`` (the post-SPMD per-device module) gives
+FLOPs and bytes; collective bytes are parsed from the optimized HLO text —
+result-shard shapes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, with ring-wire factors (all-reduce moves
+~2x its payload: reduce-scatter + all-gather phases).
+
+Hardware model (TPU v5e-class, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import functools
+import re
+from typing import Dict
+
+import numpy as np
+
+HW = {
+    "peak_flops": 197e12,  # bf16 / chip
+    "hbm_bw": 819e9,  # B/s / chip
+    "link_bw": 50e9,  # B/s / link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# ring wire factor per element of the *result* shard
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+_INSTR_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s+([\w\-]+)\("
+)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shard bytes of every collective in the optimized HLO
+    (handles async `-start`/`-done` pairs by counting `-start` only)."""
+    out: Dict[str, float] = {op: 0.0 for op in _COLL_OPS}
+    counts: Dict[str, int] = {op: 0 for op in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        type_str, opname = m.group(1), m.group(2)
+        if opname.endswith("-done"):
+            continue
+        base = opname[:-6] if opname.endswith("-start") else opname
+        if base in _COLL_OPS:
+            out[base] += _shape_bytes(type_str)
+            counts[base] += 1
+    out["counts"] = counts  # type: ignore
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def param_counts(arch: str):
+    """(total_params, active_params) from the real init shapes."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models.lm import init_lm
+
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda k: init_lm(k, cfg), jax.random.PRNGKey(0))
+    total = 0
+    routed = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = int(np.prod(leaf.shape))
+        total += n
+        keys = [str(getattr(k, "key", k)) for k in path]
+        # routed-expert weights: 3D (E, d, ff) under a "moe" scope
+        if "moe" in keys and keys[-1] in ("wg", "wu", "wd"):
+            routed += n
+    active = total - routed
+    if cfg.moe_experts:
+        active += routed * cfg.moe_top_k / cfg.moe_experts
+    return int(total), int(active)
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """6·N·D (dense) or 6·N_active·D (MoE) — useful-compute reference."""
+    from repro.configs import SHAPES
+
+    seq, batch, kind = SHAPES[shape]
+    total, active = param_counts(arch)
+    tokens = seq * batch if kind in ("train", "prefill") else batch
+    mult = 6.0 if kind == "train" else 2.0  # fwd-only for prefill/decode
+    return mult * active * tokens
+
+
+def roofline_terms(rec: Dict, arch: str) -> Dict:
+    """Compute the three terms (seconds) for one dry-run record."""
+    chips = rec.get("devices", 1)
+    cost = rec.get("cost", {})
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    coll = rec.get("collectives", {})
+    wire = sum(
+        float(coll.get(op, 0.0)) * _WIRE_FACTOR[op] for op in _COLL_OPS
+    )
+    t_compute = flops / HW["peak_flops"]
+    t_memory = bytes_acc / HW["hbm_bw"]
+    t_coll = wire / HW["link_bw"]
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(arch, rec["shape"])
+    useful = mf / max(flops * chips, 1.0)
+    bound = max(t_compute, t_memory, t_coll)
+    frac = t_compute / bound if bound > 0 else 0.0
+    terms.update(
+        dominant=dom.replace("_s", ""),
+        model_flops=mf,
+        useful_flop_frac=useful,
+        roofline_frac=frac,
+        step_time_lb_s=bound,
+    )
+    return terms

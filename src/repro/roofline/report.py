@@ -1,0 +1,76 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun JSONL.
+
+  PYTHONPATH=src python -m repro.roofline.report results/dryrun.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+
+
+def load(path: str):
+    recs = [json.loads(l) for l in open(path)]
+    return [r for r in recs if "error" not in r]
+
+
+def dryrun_table(recs) -> str:
+    out = [
+        "| arch | shape | mesh | lower s | compile s | temp/dev GiB | "
+        "HLO GFLOP/dev | coll MB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        coll = r.get("collectives", {})
+        cb = sum(v for k, v in coll.items() if isinstance(v, (int, float)))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['lower_s']} | "
+            f"{r['compile_s']} | "
+            f"{r.get('memory', {}).get('temp_size_in_bytes', 0)/2**30:.2f} | "
+            f"{r.get('cost', {}).get('flops', 0)/1e9:.1f} | {cb/2**20:.1f} |"
+        )
+    return "\n".join(out)
+
+
+def roofline_table(recs, mesh="16x16") -> str:
+    out = [
+        "| arch | shape | compute ms | memory ms | collective ms | dominant |"
+        " roofline frac | useful-FLOP frac | one-line lever |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    levers = {
+        ("memory", "train"): "cast large scan intermediates to bf16 / fuse",
+        ("memory", "prefill"): "fuse attention epilogue; bf16 intermediates",
+        ("memory", "decode"): "batch more sequences per chip (cache-bw bound)",
+        ("collective", "train"): "overlap grad reduce-scatter with backward",
+        ("collective", "prefill"): "reorder EP dispatch; shard activations",
+        ("collective", "decode"): "avoid KV head-expansion resharding (GQA einsum)",
+        ("compute", "train"): "already compute-bound: raise MXU utilization",
+        ("compute", "prefill"): "already compute-bound: raise MXU utilization",
+        ("compute", "decode"): "increase batch to amortize weights",
+    }
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        t = r["roofline"]
+        lever = levers.get((t["dominant"], r["kind"]), "-")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']*1e3:.2f} | "
+            f"{t['memory_s']*1e3:.2f} | {t['collective_s']*1e3:.2f} | "
+            f"{t['dominant']} | {t['roofline_frac']*100:.1f}% | "
+            f"{min(t['useful_flop_frac'], 9.99)*100:.0f}% | {lever} |"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.jsonl"
+    recs = load(path)
+    print("### Dry-run (all cells, both meshes)\n")
+    print(dryrun_table(recs))
+    print("\n### Roofline (single-pod 16x16)\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Fault-tolerance runtime: heartbeats, straggler detection, elastic mesh
+re-planning."""
+from repro.runtime.fault_tolerance import (
+    ElasticPlan,
+    HeartbeatMonitor,
+    StragglerDetector,
+    replan_mesh,
+)
+
+__all__ = ["ElasticPlan", "HeartbeatMonitor", "StragglerDetector", "replan_mesh"]

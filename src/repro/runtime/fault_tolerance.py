@@ -1,0 +1,109 @@
+"""Fault tolerance for 1000+-node posture.
+
+* ``HeartbeatMonitor``: hosts report liveness; a host silent past its
+  deadline is declared dead (clock injectable for tests).
+* ``StragglerDetector``: per-step durations per host; a host is a straggler
+  when it exceeds max(deadline_floor, k · median) for ``patience``
+  consecutive steps (the "deadline + p99" rule) — the training driver then
+  excludes it like a failure (recompute its data shard elsewhere) instead of
+  letting one slow HBM/host gate every step.
+* ``replan_mesh``: given the survivor count, pick the largest (pods, data,
+  model) mesh that keeps the model axis intact (TP must stay whole; batch
+  shrinks), emitting the data re-shard plan; the checkpoint store restores
+  into any shard count, so elastic downscale = replan + restore + continue.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+
+class HeartbeatMonitor:
+    def __init__(self, hosts: List[str], timeout_s: float = 60.0, clock=None):
+        import time
+
+        self._clock = clock or time.monotonic
+        self.timeout_s = timeout_s
+        now = self._clock()
+        self.last_seen: Dict[str, float] = {h: now for h in hosts}
+
+    def beat(self, host: str) -> None:
+        self.last_seen[host] = self._clock()
+
+    def dead_hosts(self) -> List[str]:
+        now = self._clock()
+        return [h for h, t in self.last_seen.items()
+                if now - t > self.timeout_s]
+
+    def alive(self) -> List[str]:
+        dead = set(self.dead_hosts())
+        return [h for h in self.last_seen if h not in dead]
+
+
+class StragglerDetector:
+    def __init__(self, k: float = 2.0, deadline_floor_s: float = 0.05,
+                 patience: int = 3):
+        self.k = k
+        self.floor = deadline_floor_s
+        self.patience = patience
+        self._strikes: Dict[str, int] = {}
+
+    def observe_step(self, durations: Dict[str, float]) -> List[str]:
+        """Feed one step's per-host durations; returns current stragglers."""
+        if not durations:
+            return []
+        med = sorted(durations.values())[len(durations) // 2]
+        deadline = max(self.floor, self.k * med)
+        out = []
+        for h, d in durations.items():
+            if d > deadline:
+                self._strikes[h] = self._strikes.get(h, 0) + 1
+            else:
+                self._strikes[h] = 0
+            if self._strikes.get(h, 0) >= self.patience:
+                out.append(h)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    pods: int
+    data: int
+    model: int
+    global_batch: int
+    reshard: bool  # params must be re-restored under the new mesh
+
+    @property
+    def devices(self) -> int:
+        return self.pods * self.data * self.model
+
+
+def replan_mesh(
+    n_devices_alive: int,
+    model_parallel: int = 16,
+    per_replica_batch: int = 1,
+    prev: Optional[ElasticPlan] = None,
+) -> ElasticPlan:
+    """Largest usable (pods, data, model) mesh after failures.
+
+    The model axis is immutable (param shards must stay whole); we keep
+    whole multiples of (model_parallel x data=16) "pod slices" when we can,
+    else shrink the data axis. Batch scales with data parallelism so per-
+    device compute stays constant (elastic batch)."""
+    if n_devices_alive < model_parallel:
+        raise ValueError("not enough devices for one model-parallel group")
+    slice_size = model_parallel * 16
+    pods = n_devices_alive // (slice_size)
+    if pods >= 1:
+        data = 16
+    else:
+        pods = 1
+        data = n_devices_alive // model_parallel
+    plan = ElasticPlan(
+        pods=pods,
+        data=data,
+        model=model_parallel,
+        global_batch=pods * data * per_replica_batch,
+        reshard=prev is None or (pods, data) != (prev.pods, prev.data),
+    )
+    return plan

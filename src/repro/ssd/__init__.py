@@ -1,0 +1,17 @@
+"""SSD substrate: Table-1 configs, FTL, flash-array geometry, and the jitted
+discrete-resource simulator for all six evaluated designs (Baseline, pSSD,
+pnSSD, NoSSD, Venice, path-conflict-free ideal)."""
+from repro.ssd.config import (
+    SSDConfig,
+    PowerModel,
+    cost_optimized,
+    perf_optimized,
+    TICK_NS,
+)
+from repro.ssd.sim import DESIGNS, SimResult, simulate
+from repro.ssd.ftl import FTL, Transactions, decompose_trace
+
+__all__ = [
+    "SSDConfig", "PowerModel", "cost_optimized", "perf_optimized", "TICK_NS",
+    "DESIGNS", "SimResult", "simulate", "FTL", "Transactions", "decompose_trace",
+]

@@ -1,0 +1,82 @@
+"""Benchmark harness: trace → FTL → per-design simulation → paper metrics.
+
+Methodology note (documented in DESIGN.md / EXPERIMENTS.md): the paper replays
+week-long enterprise traces whose *bursts* saturate the device even though the
+Table-2 mean inter-arrival times look sparse.  Our synthetic traces match the
+Table-2 statistics exactly; to reproduce the paper's saturation regime we use
+*accelerated replay* (standard MQSim-style methodology): arrivals are scaled
+so the offered load reaches ``target_util`` of the baseline's aggregate
+channel bandwidth (never decelerated).  Table-2 statistics are validated on
+the unscaled traces in the test suite; fig-13 conflict rates and fig-9/10
+speedup magnitudes are validated on the accelerated replays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable
+
+import numpy as np
+
+from repro.ssd.config import SSDConfig
+from repro.ssd.ftl import decompose_trace
+from repro.ssd.sim import SimResult, simulate
+from repro.traces.generator import default_n_requests, to_pages, trace_for
+
+
+@dataclasses.dataclass
+class WorkloadRun:
+    name: str
+    cfg: SSDConfig
+    accel: float
+    n_requests: int
+    results: Dict[str, SimResult]
+
+    def speedup(self, design: str, base: str = "baseline") -> float:
+        return self.results[base].exec_s / self.results[design].exec_s
+
+    def iops_norm(self, design: str, base: str = "ideal") -> float:
+        return self.results[design].iops() / self.results[base].iops()
+
+
+def offered_utilization(trace, cfg: SSDConfig) -> float:
+    """Offered load as a fraction of aggregate shared-channel bandwidth."""
+    span_us = float(trace["arrival_us"][-1] - trace["arrival_us"][0])
+    tot_bytes = float(np.sum(trace["size_bytes"]))
+    bw_bytes_per_us = cfg.chan_gbps * 1e3 * cfg.rows  # GB/s == KB/ms == B/us*1e3
+    return tot_bytes / max(span_us, 1e-9) / bw_bytes_per_us
+
+
+def accelerate(trace, cfg: SSDConfig, target_util: float = 1.5) -> tuple:
+    """Scale arrivals to reach ``target_util`` offered load (never slow down)."""
+    u = offered_utilization(trace, cfg)
+    factor = max(1.0, target_util / max(u, 1e-9))
+    if factor > 1.0:
+        trace = dict(trace)
+        trace["arrival_us"] = trace["arrival_us"] / factor
+    return trace, factor
+
+
+def run_workload(
+    name: str,
+    cfg: SSDConfig,
+    designs: Iterable[str] = ("baseline", "pssd", "pnssd", "nossd", "venice", "ideal"),
+    n_requests: int | None = None,
+    target_util: float | None = 1.5,
+    seed: int = 0,
+) -> WorkloadRun:
+    n = n_requests or default_n_requests(name)
+    trace = trace_for(name, n, seed)
+    accel = 1.0
+    if target_util is not None:
+        trace, accel = accelerate(trace, cfg, target_util)
+    pages = to_pages(trace, cfg.page_bytes)
+    txns = decompose_trace(cfg, pages, footprint_pages=int(pages["footprint_pages"]))
+    results = {d: simulate(cfg, txns, d, seed=seed + 7) for d in designs}
+    return WorkloadRun(
+        name=name, cfg=cfg, accel=accel, n_requests=txns.n_requests, results=results
+    )
+
+
+def geomean(xs) -> float:
+    xs = np.asarray(list(xs), dtype=np.float64)
+    return float(np.exp(np.mean(np.log(np.maximum(xs, 1e-12)))))

@@ -1,0 +1,862 @@
+"""Jitted discrete-resource SSD simulator for the six evaluated designs.
+
+Replaces MQSim's event-driven C++ core with a ``lax.scan`` over page-level
+transactions in arrival order: each step computes the transaction's start time
+from the *free-at* state of every resource it needs (plane, flash controller,
+channel or mesh links), commits its occupancy, and emits completion/energy
+stats.  Venice's path reservation runs the Algorithm-1 scout engine
+(``core/scout.py``) inside the scan, retrying at the next link-free event when
+a scout fails — exactly the paper's "retry immediately" policy (§4.2).
+
+Designs
+  baseline        multi-channel shared bus (Table 1)
+  pssd            Kim+ [15]: packetized, 2x channel bandwidth
+  pnssd           Kim+ [15]: row+column shared buses (two paths per chip)
+  nossd           Tavakkol+ [38]: 2D mesh, deterministic XY routing
+  venice          the paper: scout path reservation + non-minimal adaptive
+  venice_minimal  ablation: Venice with minimal-only adaptive routing
+  venice_release  beyond-paper: release the circuit during tR, re-scout for
+                  the read-data phase (recovers link-hours; §Perf)
+  ideal           path-conflict-free: a private channel per chip
+
+Approximations vs MQSim (all documented in DESIGN.md §3): in-order commit per
+transaction; single-gap backfill per shared bus (captures CMD-during-tR and
+one-deep data backfill — the dominant pipelining in a real channel); NoSSD's
+buffered wormhole modeled as transient circuits per packet phase.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scout import make_tables, scout_route
+from repro.core.topology import MeshTopology, build_mesh, all_xy_paths
+from repro.ssd.config import SSDConfig, TICK_NS
+
+DESIGNS = (
+    "baseline",
+    "pssd",
+    "pnssd",
+    "nossd",
+    "venice",
+    "venice_minimal",
+    "venice_hold",
+    "venice_kscout",
+    "ideal",
+)
+
+_BIG = np.int32(2**30)
+
+KIND_READ, KIND_WRITE, KIND_ERASE = 0, 1, 2
+
+
+class TxnArrays(NamedTuple):
+    """Page-level transactions, sorted by arrival (ticks)."""
+
+    arrival: jnp.ndarray  # int32 [n]
+    kind: jnp.ndarray  # int32 [n] 0=read 1=write 2=erase
+    plane: jnp.ndarray  # int32 [n] global plane id
+    node: jnp.ndarray  # int32 [n] chip / mesh node id
+    row: jnp.ndarray  # int32 [n] channel id
+    nbytes: jnp.ndarray  # int32 [n]
+    op_ticks: jnp.ndarray  # int32 [n] tR/tPROG/tBERS by kind
+    valid: jnp.ndarray  # bool  [n] padding mask
+
+
+class StepOut(NamedTuple):
+    completion: jnp.ndarray  # int32 ticks
+    wait: jnp.ndarray  # int32 ticks spent waiting on the path (conflict time)
+    conflict: jnp.ndarray  # bool — experienced a path conflict (fig. 13)
+    hops: jnp.ndarray  # int32 (mesh designs; 0 for bus designs)
+    tries: jnp.ndarray  # int32 scout attempts (venice)
+    scout_steps: jnp.ndarray  # int32 DFS steps (venice)
+    misroutes: jnp.ndarray  # int32 non-minimal hops on final path (venice)
+    bus_hold: jnp.ndarray  # int32 ticks a shared bus was held
+    link_hold: jnp.ndarray  # int32 link-ticks (sum over links held)
+
+
+# ---------------------------------------------------------------------------
+# resource scheduling primitives
+#
+# Every time-shared resource (bus channel, mesh link, flash controller) is a
+# triple of arrays (free_at, gap_s, gap_e): busy through ``free_at`` except
+# one remembered idle gap [gap_s, gap_e).  The in-order scan can commit
+# transfers far in the future (e.g. a write waiting on a 100 us tPROG), and
+# the remembered gap keeps the resource's *current* idle capacity usable by
+# later transactions instead of ratcheting free_at forward — the one-gap
+# interval model is what keeps this O(1)-state simulator faithful to an
+# event-driven scheduler to first order.
+# ---------------------------------------------------------------------------
+
+
+def _gap_avail(gs, ge, fa, e, d):
+    """Earliest start >= e where a d-tick usage fits (gap or tail)."""
+    s_gap = jnp.maximum(e, gs)
+    fits = (s_gap + d) <= ge
+    return jnp.where(fits, s_gap, jnp.maximum(e, fa))
+
+
+def _gap_commit(gs, ge, fa, s, e2):
+    """Carve the interval [s, e2) out; remember the larger leftover gap."""
+    in_gap = (s >= gs) & (e2 <= ge)
+    # inside the gap: keep the larger of the two leftover sides
+    left_bigger = (s - gs) >= (ge - e2)
+    g_gs = jnp.where(left_bigger, gs, e2)
+    g_ge = jnp.where(left_bigger, s, ge)
+    # appended at/after free_at: keep the larger of (old gap, new idle span)
+    new_idle = jnp.maximum(s, fa) - fa
+    keep_old = (ge - gs) >= new_idle
+    a_gs = jnp.where(keep_old, gs, fa)
+    a_ge = jnp.where(keep_old, ge, jnp.maximum(s, fa))
+    a_fa = jnp.maximum(fa, e2)
+    return (
+        jnp.where(in_gap, g_gs, a_gs),
+        jnp.where(in_gap, g_ge, a_ge),
+        jnp.where(in_gap, fa, a_fa),
+    )
+
+
+def _avail1(res, i, e, d):
+    free, gap_s, gap_e = res
+    return _gap_avail(gap_s[i], gap_e[i], free[i], e, d)
+
+
+def _commit1(res, i, s, e2, enable):
+    free, gap_s, gap_e = res
+    gs, ge, fa = _gap_commit(gap_s[i], gap_e[i], free[i], s, e2)
+    return (
+        free.at[i].set(jnp.where(enable, fa, free[i])),
+        gap_s.at[i].set(jnp.where(enable, gs, gap_s[i])),
+        gap_e.at[i].set(jnp.where(enable, ge, gap_e[i])),
+    )
+
+
+def _avail_all(res, e, d):
+    """Vectorized earliest-start for every resource in the triple."""
+    free, gap_s, gap_e = res
+    return _gap_avail(gap_s, gap_e, free, e, d)
+
+
+def _busy_at(res, t, d):
+    """bool per resource: cannot host a d-tick usage starting exactly at t."""
+    free, gap_s, gap_e = res
+    free_ok = t >= free
+    gap_ok = (t >= gap_s) & ((t + d) <= gap_e)
+    return ~(free_ok | gap_ok)
+
+
+def _commit_mask(res, mask, s, e2, enable):
+    free, gap_s, gap_e = res
+    gs, ge, fa = _gap_commit(gap_s, gap_e, free, s, e2)
+    take = mask & enable
+    return (
+        jnp.where(take, fa, free),
+        jnp.where(take, gs, gap_s),
+        jnp.where(take, ge, gap_e),
+    )
+
+
+def _sched_gap(chan, ch, e, d, enable):
+    """Schedule a d-tick usage of resource ``ch`` at the earliest time >= e."""
+    s = _avail1(chan, ch, e, d)
+    s = jnp.where(enable, s, e)
+    chan = _commit1(chan, ch, s, s + d, enable)
+    return s, chan
+
+
+def _triple(n: int):
+    z = jnp.zeros((n,), jnp.int32)
+    return (z, z, z)
+
+
+# ---------------------------------------------------------------------------
+# shared-bus designs
+# ---------------------------------------------------------------------------
+
+
+def _bus_step(cfg: SSDConfig, chan_of_tx, xfer_of_tx, ovh: int):
+    """Build the scan step for a pure shared-bus design.
+
+    ``ovh``: per-bus-phase protocol overhead (legacy ONFI bus only)."""
+
+    def step(state, tx: TxnArrays):
+        plane_free, chan = state
+        ch = chan_of_tx(tx)
+        xfer = xfer_of_tx(tx)
+        is_read = tx.kind == KIND_READ
+        d0 = ovh + cfg.t_cmd + jnp.where(is_read, 0, xfer)
+        e0 = jnp.maximum(tx.arrival, plane_free[tx.plane])
+        s0, chan = _sched_gap(chan, ch, e0, d0, tx.valid)
+        phase0_end = s0 + d0
+        op_end = phase0_end + tx.op_ticks
+        # read data phase (zero-length & disabled otherwise)
+        d1 = ovh + xfer
+        s1, chan = _sched_gap(chan, ch, op_end, d1, tx.valid & is_read)
+        done = jnp.where(is_read, s1 + d1, op_end)
+        plane_free = plane_free.at[tx.plane].set(
+            jnp.where(tx.valid, done, plane_free[tx.plane])
+        )
+        wait = (s0 - e0) + jnp.where(is_read, s1 - op_end, 0)
+        out = StepOut(
+            completion=done,
+            wait=wait,
+            conflict=wait > 0,
+            hops=jnp.int32(0),
+            tries=jnp.int32(1),
+            scout_steps=jnp.int32(0),
+            misroutes=jnp.int32(0),
+            bus_hold=d0 + jnp.where(is_read, d1, 0),
+            link_hold=jnp.int32(0),
+        )
+        return (plane_free, chan), out
+
+    return step
+
+
+def _pnssd_step(cfg: SSDConfig, topo: MeshTopology):
+    """pnSSD: each chip reachable over its row bus or its column bus.
+
+    The controller keeps the baseline's 8 flash controllers: FC ``i`` drives
+    horizontal channel ``i`` and vertical channel ``i``, one transfer at a
+    time — pnSSD adds *path diversity*, not transfer engines [15]."""
+
+    rows = topo.rows
+
+    def xfer_of(tx):
+        return _xfer_bus(cfg, tx.nbytes, 1.0)
+
+    def step(state, tx: TxnArrays):
+        plane_free, chan, chips, fcs = state
+        col = tx.node % topo.cols
+        ch_row = tx.row
+        ch_col = rows + col
+        xfer = xfer_of(tx)
+        is_read = tx.kind == KIND_READ
+        d0 = cfg.t_cmd + jnp.where(is_read, 0, xfer)  # packetized: no bus ovh
+        e0 = jnp.maximum(tx.arrival, plane_free[tx.plane])
+
+        def sched_on(ch, fc):
+            # the chip's single I/O interface gates both of its buses, and
+            # the owning FC must be free to drive the transfer
+            e0c = jnp.maximum(e0, _avail1(chips, tx.node, e0, d0))
+            e0c = jnp.maximum(e0c, _avail1(fcs, fc, e0c, d0))
+            s0, chan1 = _sched_gap(chan, ch, e0c, d0, tx.valid)
+            chips1 = _commit1(chips, tx.node, s0, s0 + d0, tx.valid)
+            fcs1 = _commit1(fcs, fc, s0, s0 + d0, tx.valid)
+            op_end = s0 + d0 + tx.op_ticks
+            e1 = jnp.maximum(op_end, _avail1(chips1, tx.node, op_end, xfer))
+            e1 = jnp.maximum(e1, _avail1(fcs1, fc, e1, xfer))
+            s1, chan1 = _sched_gap(chan1, ch, e1, xfer, tx.valid & is_read)
+            chips1 = _commit1(chips1, tx.node, s1, s1 + xfer, tx.valid & is_read)
+            fcs1 = _commit1(fcs1, fc, s1, s1 + xfer, tx.valid & is_read)
+            done = jnp.where(is_read, s1 + xfer, op_end)
+            wait = (s0 - e0) + jnp.where(is_read, s1 - op_end, 0)
+            return done, wait, chan1, chips1, fcs1
+
+        done_r, wait_r, chan_r, chips_r, fcs_r = sched_on(ch_row, ch_row)
+        done_c, wait_c, chan_c, chips_c, fcs_c = sched_on(ch_col, col)
+        use_row = done_r <= done_c
+        done = jnp.where(use_row, done_r, done_c)
+        wait = jnp.where(use_row, wait_r, wait_c)
+        chan = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(use_row, a, b), chan_r, chan_c
+        )
+        chips = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(use_row, a, b), chips_r, chips_c
+        )
+        fcs = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(use_row, a, b), fcs_r, fcs_c
+        )
+        plane_free = plane_free.at[tx.plane].set(
+            jnp.where(tx.valid, done, plane_free[tx.plane])
+        )
+        out = StepOut(
+            completion=done,
+            wait=wait,
+            conflict=wait > 0,
+            hops=jnp.int32(0),
+            tries=jnp.int32(1),
+            scout_steps=jnp.int32(0),
+            misroutes=jnp.int32(0),
+            bus_hold=d0 + jnp.where(is_read, xfer, 0),
+            link_hold=jnp.int32(0),
+        )
+        return (plane_free, chan, chips, fcs), out
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# mesh designs (NoSSD / Venice)
+# ---------------------------------------------------------------------------
+
+
+def _ceil_div(a, b):
+    return (a + b - 1) // b
+
+
+def _xfer_bus(cfg: SSDConfig, nbytes, mult):
+    """Shared-channel transfer ticks (rational arithmetic in ns)."""
+    ns_num = nbytes.astype(jnp.int32) * 1000  # fits: nbytes <= ~1 MB
+    ns_den = jnp.int32(round(cfg.chan_gbps * mult * 1000))  # B/ns * 1000
+    ns = _ceil_div(ns_num, ns_den)
+    return _ceil_div(ns, TICK_NS).astype(jnp.int32)
+
+
+def _xfer_link(cfg: SSDConfig, nbytes, hops):
+    """Eq. (1): (distance + size/width) * link_lat, in ticks."""
+    ns = (nbytes + hops).astype(jnp.int32)  # 1 B/ns, 1 hop = 1 ns pipeline fill
+    return _ceil_div(ns, TICK_NS).astype(jnp.int32)
+
+
+def _cmd_link(cfg: SSDConfig, hops):
+    ns = jnp.int32(8) + hops  # 8-byte command packet
+    return jnp.maximum(_ceil_div(ns, TICK_NS).astype(jnp.int32), 1)
+
+
+def _fc_select(fcs, dist_to_dst, tcand, d_est):
+    """Paper §4.2: closest FC *available now*, else the earliest-available FC
+    (availability = can host a d_est-tick transfer, gap-aware)."""
+    avail = _avail_all(fcs, tcand, d_est)  # [n_fcs]
+    free = avail <= tcand
+    any_free = jnp.any(free)
+    by_dist = jnp.argmin(jnp.where(free, dist_to_dst, _BIG))
+    by_time = jnp.argmin(avail)
+    fc = jnp.where(any_free, by_dist, by_time).astype(jnp.int32)
+    t0 = jnp.maximum(tcand, avail[fc])
+    return fc, t0, any_free
+
+
+def _nossd_step(cfg: SSDConfig, topo: MeshTopology):
+    """NoSSD [38]: packet-switched mesh, deterministic XY routing.
+
+    Each packet phase (command forward; data back) occupies the XY path as a
+    transient circuit.  FCs are pipelined processors like baseline channel
+    controllers: busy only while a packet of theirs is in flight (single-gap
+    backfill lets the FC interleave other requests during tR)."""
+    paths_np, hops_np = all_xy_paths(topo)
+    # [n_fcs, n_nodes, n_links] bool path masks
+    masks = np.zeros((topo.n_fcs, topo.n_nodes, topo.n_links), dtype=bool)
+    for f in range(topo.n_fcs):
+        for n in range(topo.n_nodes):
+            lk = paths_np[f, n]
+            masks[f, n, lk[lk >= 0]] = True
+    masks = jnp.asarray(masks)
+    hops_t = jnp.asarray(hops_np, dtype=jnp.int32)
+    dist = jnp.asarray(hops_np, dtype=jnp.int32)  # XY dist == manhattan here
+
+    def path_sched(links, mask, e, d):
+        """Earliest common start >= e for a d-tick transient circuit on the
+        masked path.  Per-link availability first; if the joint candidate
+        doesn't fit everywhere, fall back to the path's free_at tail."""
+        avail = _avail_all(links, e, d)
+        s1 = jnp.max(jnp.where(mask, avail, 0))
+        s1 = jnp.maximum(s1, e)
+        ok = ~jnp.any(_busy_at(links, s1, d) & mask)
+        s_tail = jnp.maximum(e, jnp.max(jnp.where(mask, links[0], 0)))
+        return jnp.where(ok, s1, s_tail)
+
+    def step(state, tx: TxnArrays):
+        plane_free, fcs, links, chips = state
+        tcand = jnp.maximum(tx.arrival, plane_free[tx.plane])
+        is_read = tx.kind == KIND_READ
+        d_est = _xfer_link(cfg, tx.nbytes, 6)
+        fc, t0, any_free = _fc_select(fcs, dist[:, tx.node], tcand, d_est)
+        mask = masks[fc, tx.node]
+        hops = hops_t[fc, tx.node]
+        cmd = _cmd_link(cfg, hops)
+        xfer = _xfer_link(cfg, tx.nbytes, hops)
+
+        # phase 0: command (reads) / command+data (writes, erases) forward
+        d0 = cmd + jnp.where(is_read, 0, xfer)
+        e0 = jnp.maximum(t0, _avail1(chips, tx.node, t0, d0))
+        s0 = path_sched(links, mask, e0, d0)
+        s0 = jnp.maximum(s0, _avail1(fcs, fc, s0, d0))  # FC must drive it
+        p0_end = s0 + d0
+        links = _commit_mask(links, mask, s0, p0_end, tx.valid)
+        fcs = _commit1(fcs, fc, s0, p0_end, tx.valid)
+        chips = _commit1(chips, tx.node, s0, p0_end, tx.valid)
+        op_end = p0_end + tx.op_ticks
+        # phase 1: read-data packet back over the same XY path
+        e1 = jnp.maximum(op_end, _avail1(chips, tx.node, op_end, xfer))
+        s1 = path_sched(links, mask, e1, xfer)
+        s1 = jnp.maximum(s1, _avail1(fcs, fc, s1, xfer))
+        p1_end = s1 + xfer
+        links = _commit_mask(links, mask, s1, p1_end, tx.valid & is_read)
+        fcs = _commit1(fcs, fc, s1, p1_end, tx.valid & is_read)
+        chips = _commit1(chips, tx.node, s1, p1_end, tx.valid & is_read)
+        done = jnp.where(is_read, p1_end, op_end)
+        plane_free = plane_free.at[tx.plane].set(
+            jnp.where(tx.valid, done, plane_free[tx.plane])
+        )
+        wait = (s0 - t0) + jnp.where(is_read, s1 - op_end, 0)
+        out = StepOut(
+            completion=done,
+            wait=wait,
+            conflict=wait > 0,
+            hops=hops,
+            tries=jnp.int32(1),
+            scout_steps=jnp.int32(0),
+            misroutes=jnp.int32(0),
+            bus_hold=jnp.int32(0),
+            link_hold=hops * (d0 + jnp.where(is_read, xfer, 0)),
+        )
+        return (plane_free, fcs, links, chips), out
+
+    return step
+
+
+def _venice_step(
+    cfg: SSDConfig,
+    topo: MeshTopology,
+    allow_nonminimal: bool = True,
+    hold_during_op: bool = False,
+    max_tries: int = 64,
+    n_scouts: int = 1,
+):
+    """Venice (§4): per-*transfer* path reservation via Algorithm-1 scouts.
+
+    The reserved bidirectional circuit serves the data transfer — forward for
+    writes (command+data), backward for reads (§4.2).  A read's command is a
+    scout-sized packet delivered without a standing reservation (transient
+    per-hop occupancy, like the scout itself); the data-phase scout is sent
+    when tR completes, so links and the FC are never parked across tR.
+    ``hold_during_op=True`` gives the conservative variant that keeps one
+    circuit across CMD+tR+transfer (ablation: wastes link-hours).
+    FCs are pipelined processors (single-gap backfill), busy only while
+    scouting/transferring; §6.3's "all FCs busy" gate is preserved.
+    """
+    tables = make_tables(topo)
+    fc_node = jnp.asarray(topo.fc_node, dtype=jnp.int32)
+    r = np.arange(topo.n_nodes) // topo.cols
+    c = np.arange(topo.n_nodes) % topo.cols
+    dist_np = np.abs(np.arange(topo.rows)[:, None] - r[None, :]) + c[None, :]
+    dist = jnp.asarray(dist_np, dtype=jnp.int32)
+    scout_hop_ticks_num = int(round(cfg.scout_flit_ns))  # ns per hop per direction
+
+    def scout_until_success(links, src, dst, t0, rng, d_hold):
+        """Retry the scout at successive link-free events until it reserves.
+
+        A link is busy for the scout if it cannot host a ``d_hold``-tick
+        reservation starting now (gap-aware: a link with a large enough idle
+        window before its next commitment still accepts the circuit)."""
+
+        def try_once(t, rng):
+            # beyond-paper k-scout (paper fn. 3 hints at resend policies):
+            # launch n_scouts with independent tie-break streams and commit
+            # the successful path with the FEWEST hops — shorter circuits
+            # hold fewer link-hours, raising sustainable throughput.
+            busy = _busy_at(links, t, d_hold)
+            best = None
+            for _ in range(n_scouts):
+                rng = (rng * jnp.uint32(747796405)
+                       + jnp.uint32(2891336453)) | jnp.uint32(1)
+                res = scout_route(tables, src, dst, busy, rng, allow_nonminimal)
+                if best is None:
+                    best = res
+                else:
+                    take = res.success & (
+                        (~best.success) | (res.hops < best.hops)
+                    )
+                    best = jax.tree_util.tree_map(
+                        lambda a, b: jnp.where(take, a, b), res, best
+                    )
+            return best, rng
+
+        res0, rng = try_once(t0, rng)
+
+        def cond(carry):
+            res, t, rng, tries = carry
+            return (~res.success) & (tries < max_tries)
+
+        def body(carry):
+            res, t, rng, tries = carry
+            # advance to the next potential link-state change:
+            # a free_at passing, or an idle gap opening
+            free, gap_s, _ = links
+            ev = jnp.minimum(
+                jnp.min(jnp.where(free > t, free, _BIG)),
+                jnp.min(jnp.where(gap_s > t, gap_s, _BIG)),
+            )
+            t_next = jnp.maximum(ev, t + 1)
+            t_next = jnp.where(tries + 1 >= max_tries, jnp.max(free), t_next)
+            res, rng = try_once(t_next, rng)
+            return res, t_next, rng, tries + 1
+
+        res, t, rng, tries = jax.lax.while_loop(
+            cond, body, (res0, t0, rng, jnp.int32(1))
+        )
+        return res, t, rng, tries
+
+    def step(state, tx: TxnArrays):
+        plane_free, fcs, links, chips, rng = state
+        tcand = jnp.maximum(tx.arrival, plane_free[tx.plane])
+        is_read = tx.kind == KIND_READ
+        # duration estimate for availability checks: transfer + scout-RTT margin
+        d_est = _xfer_link(cfg, tx.nbytes, 48) + 16
+        if hold_during_op:
+            d_est = d_est + jnp.where(is_read, tx.op_ticks, 0)
+        fc, t0, any_free = _fc_select(fcs, dist[:, tx.node], tcand, d_est)
+        src = fc_node[fc]
+        min_hops = dist[fc, tx.node]
+        cmd_pkt = _cmd_link(cfg, min_hops)  # read command: scout-sized packet
+
+        if hold_during_op:
+            # one circuit across CMD + flash op + transfer (conservative)
+            res, t_resv, rng, tries = scout_until_success(
+                links, src, tx.node, t0, rng, d_est
+            )
+            hops = res.hops
+            rtt = _ceil_div((res.steps + hops) * scout_hop_ticks_num, TICK_NS)
+            start = t_resv + rtt.astype(jnp.int32)
+            cmd = _cmd_link(cfg, hops)
+            xfer = _xfer_link(cfg, tx.nbytes, hops)
+            done_r = start + cmd + tx.op_ticks + xfer
+            data_end_w = start + cmd + xfer
+            circuit_end = jnp.where(is_read, done_r, data_end_w)
+            links = _commit_mask(links, res.path_mask, t_resv, circuit_end, tx.valid)
+            fcs = _commit1(fcs, fc, t_resv, circuit_end, tx.valid)
+            chips = _commit1(chips, tx.node, t_resv, circuit_end, tx.valid)
+            done = jnp.where(is_read, done_r, data_end_w + tx.op_ticks)
+            out = StepOut(
+                completion=done,
+                wait=start - t0,
+                conflict=tries > 1,
+                hops=hops,
+                tries=tries,
+                scout_steps=res.steps,
+                misroutes=res.misroutes,
+                bus_hold=jnp.int32(0),
+                link_hold=hops * (circuit_end - t_resv),
+            )
+            plane_free = plane_free.at[tx.plane].set(
+                jnp.where(tx.valid, done, plane_free[tx.plane])
+            )
+            return (plane_free, fcs, links, chips, rng), out
+
+        # ---- paper design: reservation per transfer ----
+        # reads: command packet now; data-phase scout at tR completion
+        s_cmd, fcs = _sched_gap(fcs, fc, t0, cmd_pkt, tx.valid & is_read)
+        ready_r = s_cmd + cmd_pkt + tx.op_ticks  # data ready in page buffer
+        # the data-phase transfer additionally needs this FC and the chip's
+        # I/O interface to be available (the FC tracks chip status and only
+        # scouts when the transfer can actually start)
+        t_nonread = jnp.maximum(t0, _avail1(chips, tx.node, t0, d_est))
+        t_read = jnp.maximum(
+            jnp.maximum(ready_r, _avail1(fcs, fc, ready_r, d_est)),
+            _avail1(chips, tx.node, ready_r, d_est),
+        )
+        t_xfer_req = jnp.where(is_read, t_read, t_nonread)
+
+        res, t_resv, rng, tries = scout_until_success(
+            links, src, tx.node, t_xfer_req, rng, d_est
+        )
+        hops = res.hops
+        rtt = _ceil_div((res.steps + hops) * scout_hop_ticks_num, TICK_NS)
+        start = t_resv + rtt.astype(jnp.int32)
+        cmd = _cmd_link(cfg, hops)
+        xfer = _xfer_link(cfg, tx.nbytes, hops)
+        # read: backward data transfer; write/erase: forward command+data
+        dur = jnp.where(is_read, xfer, cmd + xfer)
+        end = start + dur
+        links = _commit_mask(links, res.path_mask, t_resv, end, tx.valid)
+        fcs = _commit1(fcs, fc, t_resv, end, tx.valid)
+        chips = _commit1(chips, tx.node, t_resv, end, tx.valid)
+        done = jnp.where(is_read, end, end + tx.op_ticks)
+        plane_free = plane_free.at[tx.plane].set(
+            jnp.where(tx.valid, done, plane_free[tx.plane])
+        )
+        out = StepOut(
+            completion=done,
+            wait=(s_cmd - t0) + (start - t_xfer_req),
+            conflict=tries > 1,
+            hops=hops,
+            tries=tries,
+            scout_steps=res.steps,
+            misroutes=res.misroutes,
+            bus_hold=jnp.int32(0),
+            link_hold=hops * (end - t_resv),
+        )
+        return (plane_free, fcs, links, chips, rng), out
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# harness
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _build_sim(cfg: SSDConfig, design: str, n_pad: int):
+    """Compile one scan program per (config, design, padded length)."""
+    topo = build_mesh(cfg.rows, cfg.cols)
+
+    if design in ("baseline", "pssd"):
+        mult = 2.0 if design == "pssd" else 1.0
+        ovh = 0 if design == "pssd" else cfg.t_bus_ovh  # pSSD is packetized
+        step = _bus_step(
+            cfg, lambda tx: tx.row, lambda tx: _xfer_bus(cfg, tx.nbytes, mult), ovh
+        )
+        n_chan = cfg.rows
+    elif design == "ideal":
+        step = _bus_step(
+            cfg,
+            lambda tx: tx.node,
+            lambda tx: _xfer_bus(cfg, tx.nbytes, 1.0),
+            cfg.t_bus_ovh,
+        )
+        n_chan = topo.n_nodes
+    elif design == "pnssd":
+        step = _pnssd_step(cfg, topo)
+        n_chan = topo.rows + topo.cols
+    elif design == "nossd":
+        step = _nossd_step(cfg, topo)
+        n_chan = 0
+    elif design in ("venice", "venice_minimal", "venice_hold",
+                    "venice_kscout"):
+        step = _venice_step(
+            cfg,
+            topo,
+            allow_nonminimal=design != "venice_minimal",
+            hold_during_op=design == "venice_hold",
+            n_scouts=3 if design == "venice_kscout" else 1,
+        )
+        n_chan = 0
+    else:
+        raise ValueError(f"unknown design {design!r}; one of {DESIGNS}")
+
+    is_bus = design in ("baseline", "pssd", "pnssd", "ideal")
+
+    def run(txns: TxnArrays, seed):
+        plane_free = jnp.zeros((cfg.n_planes,), jnp.int32)
+        if design == "pnssd":
+            state = (
+                plane_free,
+                _triple(n_chan),
+                _triple(topo.n_nodes),
+                _triple(topo.rows),
+            )
+        elif is_bus:
+            state = (plane_free, _triple(n_chan))
+        elif design == "nossd":
+            state = (
+                plane_free,
+                _triple(topo.n_fcs),
+                _triple(topo.n_links),
+                _triple(topo.n_nodes),
+            )
+        else:
+            state = (
+                plane_free,
+                _triple(topo.n_fcs),
+                _triple(topo.n_links),
+                _triple(topo.n_nodes),
+                jnp.asarray(seed, jnp.uint32),
+            )
+
+        def scan_step(st, tx):
+            def real(st):
+                return step(st, tx)
+
+            def skip(st):
+                out = StepOut(
+                    completion=tx.arrival,
+                    wait=jnp.int32(0),
+                    conflict=jnp.bool_(False),
+                    hops=jnp.int32(0),
+                    tries=jnp.int32(0),
+                    scout_steps=jnp.int32(0),
+                    misroutes=jnp.int32(0),
+                    bus_hold=jnp.int32(0),
+                    link_hold=jnp.int32(0),
+                )
+                return st, out
+
+            return jax.lax.cond(tx.valid, real, skip, st)
+
+        _, outs = jax.lax.scan(scan_step, state, txns)
+        return outs
+
+    return jax.jit(run), topo
+
+
+class SimResult(NamedTuple):
+    design: str
+    completion: np.ndarray  # ticks, per txn (valid only)
+    latency: np.ndarray  # ticks, per txn
+    req_latency: np.ndarray  # ticks, per host request (GC excluded)
+    wait: np.ndarray
+    conflict: np.ndarray
+    hops: np.ndarray
+    tries: np.ndarray
+    misroutes: np.ndarray
+    exec_ticks: int
+    bus_hold_ticks: int
+    link_hold_ticks: int
+    flash_energy_j: float
+    transfer_energy_j: float
+    static_energy_j: float
+
+    @property
+    def exec_s(self) -> float:
+        return self.exec_ticks * TICK_NS * 1e-9
+
+    @property
+    def energy_j(self) -> float:
+        return self.flash_energy_j + self.transfer_energy_j + self.static_energy_j
+
+    @property
+    def avg_power_w(self) -> float:
+        return self.energy_j / max(self.exec_s, 1e-12)
+
+    def iops(self, n_requests: int | None = None) -> float:
+        n = len(self.req_latency) if n_requests is None else n_requests
+        return n / max(self.exec_s, 1e-12)
+
+    def p99_latency_us(self) -> float:
+        return float(np.percentile(self.req_latency, 99)) * TICK_NS * 1e-3
+
+    def latency_cdf_us(self):
+        lat = np.sort(self.req_latency) * (TICK_NS * 1e-3)
+        return lat, np.arange(1, len(lat) + 1) / len(lat)
+
+    def conflict_rate(self) -> float:
+        return float(np.mean(self.conflict))
+
+
+def _pad_to(n: int) -> int:
+    """Bucket pad lengths to limit recompiles."""
+    size = 1024
+    while size < n:
+        size *= 2
+    return size
+
+
+def _nominal_order(cfg: SSDConfig, txns) -> np.ndarray:
+    """Order transactions by *nominal network-transfer time* (FIFO per plane,
+    zero network contention).  The scan commits resources in this order, so
+    commitments are near-chronological — the property that makes the in-order
+    O(1)-state commit faithful to an event-driven simulator.  A write stuck
+    behind a 100 us tPROG no longer reserves links/buses ahead of thousands
+    of transfers that really happen first."""
+    arrival = np.asarray(txns["arrival"], dtype=np.int64)
+    kind = np.asarray(txns["kind"])
+    plane = np.asarray(txns["plane"])
+    nbytes = np.asarray(txns["nbytes"], dtype=np.int64)
+    arr_order = np.argsort(arrival, kind="stable")
+    plane_avail = np.zeros((cfg.n_planes,), dtype=np.int64)
+    xfer_est = nbytes // TICK_NS  # ~1 B/ns
+    nominal = np.zeros_like(arrival)
+    t_r, t_w, t_e = cfg.t_read, cfg.t_prog, cfg.t_erase
+    for i in arr_order:
+        p = plane[i]
+        s = max(arrival[i], plane_avail[p])
+        k = kind[i]
+        if k == KIND_READ:
+            ready = s + 1 + t_r
+            nominal[i] = ready
+            plane_avail[p] = ready + xfer_est[i]
+        elif k == KIND_WRITE:
+            nominal[i] = s
+            plane_avail[p] = s + xfer_est[i] + t_w
+        else:
+            nominal[i] = s
+            plane_avail[p] = s + t_e
+    return np.argsort(nominal, kind="stable")
+
+
+def simulate(cfg: SSDConfig, txns, design: str, seed: int = 0) -> SimResult:
+    """Run one (config, design) simulation over numpy transaction arrays.
+
+    ``txns`` is a dict/namespace with numpy fields: arrival (ticks int), kind,
+    plane, node, row, nbytes (see ``repro.ssd.ftl.decompose_trace``).
+    """
+    n = len(txns["arrival"])
+    n_pad = _pad_to(n)
+    order = _nominal_order(cfg, txns)
+
+    def f(name, dtype, fill=0):
+        a = np.full((n_pad,), fill, dtype=dtype)
+        a[:n] = np.asarray(txns[name])[order].astype(dtype)
+        return jnp.asarray(a)
+
+    kind = np.asarray(txns["kind"])[order].astype(np.int32)
+    op = np.where(
+        kind == KIND_READ,
+        cfg.t_read,
+        np.where(kind == KIND_WRITE, cfg.t_prog, cfg.t_erase),
+    ).astype(np.int32)
+    op_pad = np.zeros((n_pad,), np.int32)
+    op_pad[:n] = op
+    valid = np.zeros((n_pad,), bool)
+    valid[:n] = True
+
+    arrs = TxnArrays(
+        arrival=f("arrival", np.int32),
+        kind=f("kind", np.int32),
+        plane=f("plane", np.int32),
+        node=f("node", np.int32),
+        row=f("row", np.int32),
+        nbytes=f("nbytes", np.int32),
+        op_ticks=jnp.asarray(op_pad),
+        valid=jnp.asarray(valid),
+    )
+
+    run, topo = _build_sim(cfg, design, n_pad)
+    outs = jax.device_get(run(arrs, np.uint32(seed | 1)))
+
+    completion = outs.completion[:n]
+    arrival = np.asarray(txns["arrival"])[order]
+    latency = completion - arrival
+    exec_ticks = int(completion.max() - arrival.min()) if n else 0
+
+    # host-request latency: completion of a request = max over its page txns
+    req = np.asarray(txns["req"])[order]
+    n_req = int(req.max()) + 1 if len(req) and req.max() >= 0 else 0
+    req_done = np.zeros((n_req,), np.int64)
+    req_arr = np.full((n_req,), np.iinfo(np.int64).max)
+    host = req >= 0
+    np.maximum.at(req_done, req[host], completion[host].astype(np.int64))
+    np.minimum.at(req_arr, req[host], arrival[host].astype(np.int64))
+    seen = req_arr < np.iinfo(np.int64).max
+    req_latency = (req_done - req_arr)[seen]
+
+    pm = cfg.power
+    tick_s = TICK_NS * 1e-9
+    die_w = np.where(
+        kind == KIND_READ,
+        pm.die_read_w,
+        np.where(kind == KIND_WRITE, pm.die_prog_w, pm.die_erase_w),
+    )
+    flash_energy = float(np.sum(op.astype(np.float64) * tick_s * die_w))
+    bus_hold = int(outs.bus_hold[:n].astype(np.int64).sum())
+    link_hold = int(outs.link_hold[:n].astype(np.int64).sum())
+    transfer_energy = (
+        bus_hold * tick_s * pm.bus_active_w + link_hold * tick_s * pm.link_active_w
+    )
+    n_routers = topo.n_nodes if design.startswith(("venice", "nossd")) else 0
+    static_energy = (pm.static_w + n_routers * pm.router_w) * exec_ticks * tick_s
+
+    return SimResult(
+        design=design,
+        completion=completion,
+        latency=latency,
+        req_latency=req_latency,
+        wait=outs.wait[:n],
+        conflict=outs.conflict[:n],
+        hops=outs.hops[:n],
+        tries=outs.tries[:n],
+        misroutes=outs.misroutes[:n],
+        exec_ticks=exec_ticks,
+        bus_hold_ticks=bus_hold,
+        link_hold_ticks=link_hold,
+        flash_energy_j=flash_energy,
+        transfer_energy_j=float(transfer_energy),
+        static_energy_j=float(static_energy),
+    )

@@ -1,0 +1,10 @@
+"""Synthetic I/O trace generation calibrated to the paper's Table 2/3."""
+from repro.traces.generator import (
+    MIXES,
+    WORKLOADS,
+    gen_trace,
+    mix_traces,
+    trace_for,
+)
+
+__all__ = ["MIXES", "WORKLOADS", "gen_trace", "mix_traces", "trace_for"]

@@ -1,0 +1,107 @@
+"""Dry-run machinery: lower+compile on a small placeholder mesh (subprocess:
+jax locks device count at first init, so tests must not pollute the main
+process), HLO collective parsing, roofline arithmetic."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.roofline.analysis import (
+    collective_bytes_from_hlo,
+    model_flops,
+    param_counts,
+    roofline_terms,
+)
+
+_MINI = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+from repro.launch.mesh import make_mesh
+from repro.launch.steps import cell_abstract
+from repro.configs import input_specs
+
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+notes = []
+fn, args, in_sh, kind = cell_abstract("qwen2-0.5b", "train_4k", mesh, notes)
+# shrink the batch so the mini-mesh cell is light
+import dataclasses
+import jax.numpy as jnp
+bshape = input_specs("qwen2-0.5b", "train_4k", batch_override=4)
+args = (args[0], args[1], bshape)
+with mesh:
+    lowered = jax.jit(fn, in_shardings=(in_sh[0], in_sh[1], in_sh[2])).lower(*args)
+    compiled = lowered.compile()
+cost = compiled.cost_analysis()
+cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+mem = compiled.memory_analysis()
+print(json.dumps({
+    "flops": float(cost.get("flops", 0)),
+    "temp": int(mem.temp_size_in_bytes),
+    "has_collectives": ("all-reduce" in compiled.as_text()
+                        or "all-gather" in compiled.as_text()),
+}))
+"""
+
+
+@pytest.mark.slow
+def test_mini_multipod_dryrun_compiles():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-c", _MINI], capture_output=True, text=True,
+        timeout=560, env=env, cwd=os.path.dirname(os.path.dirname(__file__)),
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["flops"] > 0
+    assert rec["temp"] > 0
+    assert rec["has_collectives"]  # the pod/data axes must induce comms
+
+
+def test_collective_parser():
+    hlo = """
+  %ar = f32[128,256]{1,0} all-reduce(f32[128,256] %p), replica_groups={}
+  %ag.1 = bf16[64]{0} all-gather(bf16[4] %x), dimensions={0}
+  %rs = f32[16,16]{1,0} reduce-scatter(f32[128,16] %y), dimensions={0}
+  %a2a-start = (f32[8,8], f32[8,8]) all-to-all-start(f32[8,8] %z)
+  %a2a-done = f32[8,8] all-to-all-done(%a2a-start)
+  %cp = u32[10]{0} collective-permute(u32[10] %w), source_target_pairs={{0,1}}
+  %notacoll = f32[999,999] add(f32[999,999] %a, f32[999,999] %b)
+"""
+    got = collective_bytes_from_hlo(hlo)
+    assert got["all-reduce"] == 128 * 256 * 4
+    assert got["all-gather"] == 64 * 2
+    assert got["reduce-scatter"] == 16 * 16 * 4
+    assert got["all-to-all"] == 8 * 8 * 4 * 2  # tuple of two
+    assert got["collective-permute"] == 10 * 4
+    assert got["counts"]["all-to-all"] == 1  # -done not double counted
+
+
+def test_param_counts_sane():
+    total, active = param_counts("qwen2-0.5b")
+    assert 0.3e9 < total < 0.7e9  # ~0.5B incl embeddings
+    assert active == total  # dense
+    total_k, active_k = param_counts("kimi-k2-1t-a32b")
+    assert total_k > 0.8e12  # ~1T
+    assert active_k < 0.1 * total_k  # a32b: sparse activation
+
+
+def test_roofline_terms_shape():
+    rec = {
+        "devices": 256,
+        "shape": "train_4k",
+        "cost": {"flops": 1e15, "bytes accessed": 1e12},
+        "collectives": {"all-reduce": 1e9, "all-gather": 0.0,
+                        "reduce-scatter": 0.0, "all-to-all": 0.0,
+                        "collective-permute": 0.0},
+    }
+    t = roofline_terms(rec, "qwen2-0.5b")
+    assert t["compute_s"] == pytest.approx(1e15 / 197e12)
+    assert t["memory_s"] == pytest.approx(1e12 / 819e9)
+    assert t["collective_s"] == pytest.approx(2e9 / 50e9)
+    assert t["dominant"] == "compute"
+    assert t["model_flops"] == model_flops("qwen2-0.5b", "train_4k")

@@ -1,0 +1,125 @@
+"""Pallas scout-step kernel vs pure-jnp oracle: shape/mesh/density sweeps,
+plus full-DFS replay against the scalar Algorithm-1 reference."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import build_mesh, scout_route_ref
+from repro.core.rng import seed_for_scout
+from repro.kernels.ops import make_route_batch
+from repro.kernels.ref import scout_step_ref
+from repro.kernels.scout_step import (
+    LINK_PAD,
+    STATE_W,
+    pack_tables,
+    scout_step_pallas,
+    umod,
+    xorshift32_i32,
+)
+
+
+def _mk_batch(topo, B, density, seed):
+    rs = np.random.RandomState(seed)
+    n_pad = pack_tables(topo).shape[0]
+    state = np.zeros((B, STATE_W), np.int32)
+    state[:, 0] = rs.randint(0, topo.n_nodes, B)  # cur
+    state[:, 1] = rs.randint(0, topo.n_nodes, B)  # dst
+    state[:, 2] = rs.randint(-1, 4, B)  # entry
+    state[:, 3] = rs.randint(1, 2**31 - 1, B)  # rng bits
+    busy = np.zeros((B, LINK_PAD), np.int32)
+    busy[:, : topo.n_links] = rs.rand(B, topo.n_links) < density
+    tried = np.zeros((B, 4 * n_pad), np.int32)
+    tried[:, : 4 * topo.n_nodes] = rs.rand(B, 4 * topo.n_nodes) < density / 2
+    return state, busy, tried
+
+
+@pytest.mark.parametrize("rows,cols", [(8, 8), (4, 16), (16, 4), (4, 4)])
+@pytest.mark.parametrize("density", [0.0, 0.3, 0.8])
+def test_kernel_matches_ref_over_meshes(rows, cols, density):
+    topo = build_mesh(rows, cols)
+    tables = jnp.asarray(pack_tables(topo))
+    B = 256
+    state, busy, tried = _mk_batch(topo, B, density, rows * 31 + cols)
+    got = scout_step_pallas(
+        jnp.asarray(state), jnp.asarray(busy), jnp.asarray(tried), tables,
+        cols=cols, n_nodes=topo.n_nodes, interpret=True, b_tile=128,
+    )
+    n = topo.n_nodes
+    want = scout_step_ref(
+        jnp.asarray(state), jnp.asarray(busy), jnp.asarray(tried),
+        tables[:n, 0:4], tables[:n, 4:8], cols,
+    )
+    for g, w, name in zip(got, want, ["state", "busy", "tried"]):
+        assert np.array_equal(np.asarray(g), np.asarray(w)), name
+
+
+@pytest.mark.parametrize("b_tile,B", [(128, 128), (128, 384), (256, 512)])
+def test_kernel_tile_shapes(b_tile, B):
+    topo = build_mesh(8, 8)
+    tables = jnp.asarray(pack_tables(topo))
+    state, busy, tried = _mk_batch(topo, B, 0.4, B)
+    got = scout_step_pallas(
+        jnp.asarray(state), jnp.asarray(busy), jnp.asarray(tried), tables,
+        cols=8, n_nodes=64, interpret=True, b_tile=b_tile,
+    )
+    want = scout_step_ref(
+        jnp.asarray(state), jnp.asarray(busy), jnp.asarray(tried),
+        tables[:64, 0:4], tables[:64, 4:8], 8,
+    )
+    assert np.array_equal(np.asarray(got[0]), np.asarray(want[0]))
+
+
+def test_kernel_minimal_only_mode():
+    topo = build_mesh(8, 8)
+    tables = jnp.asarray(pack_tables(topo))
+    state, busy, tried = _mk_batch(topo, 128, 0.6, 5)
+    got = scout_step_pallas(
+        jnp.asarray(state), jnp.asarray(busy), jnp.asarray(tried), tables,
+        cols=8, n_nodes=64, interpret=True, b_tile=128, allow_nonminimal=False,
+    )
+    # in minimal-only mode no step may be a misroute
+    assert int(np.asarray(got[0])[:, 6].sum()) == 0
+
+
+def test_umod_matches_python_unsigned():
+    xs = np.array([0, 1, 2**31 - 1, -1, -2**31, 12345, -98765], np.int32)
+    for m in [1, 2, 3, 4]:
+        got = np.asarray(umod(jnp.asarray(xs), jnp.int32(m)))
+        want = np.array([(int(x) & 0xFFFFFFFF) % m for x in xs], np.int32)
+        assert np.array_equal(got, want), (m, got, want)
+
+
+def test_xorshift_matches_python():
+    from repro.core.rng import xorshift32_py
+
+    xs = np.array([1, 7, 2**31 - 1, -5, 123456789], np.int32)
+    got = np.asarray(xorshift32_i32(jnp.asarray(xs))).astype(np.uint32)
+    want = np.array([xorshift32_py(int(x) & 0xFFFFFFFF) for x in xs], np.uint32)
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_full_dfs_replay_matches_scalar_reference(use_pallas):
+    topo = build_mesh(8, 8)
+    rs = np.random.RandomState(3)
+    B = 48
+    src = np.array([int(topo.fc_node[rs.randint(8)]) for _ in range(B)], np.int32)
+    dst = rs.randint(0, 64, B).astype(np.int32)
+    busy = rs.rand(B, topo.n_links) < rs.uniform(0, 0.7, (B, 1))
+    seeds = np.array([seed_for_scout(9, i) for i in range(B)], np.uint32)
+    route = make_route_batch(topo, use_pallas=use_pallas, interpret=True)
+    out = route(jnp.asarray(src), jnp.asarray(dst), jnp.asarray(busy),
+                jnp.asarray(seeds))
+    for i in range(B):
+        ref = scout_route_ref(topo, int(src[i]), int(dst[i]), busy[i].copy(),
+                              int(seeds[i]))
+        assert bool(out.success[i]) == ref.success
+        assert int(out.steps[i]) == ref.steps
+        if ref.success:
+            mask = np.zeros(topo.n_links, bool)
+            mask[ref.path_links] = True
+            assert np.array_equal(
+                np.asarray(out.path_mask[i, : topo.n_links]), mask
+            )
+            assert int(out.hops[i]) == ref.hops
+            assert int(out.misroutes[i]) == ref.misroutes

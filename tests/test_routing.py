@@ -1,0 +1,156 @@
+"""Algorithm-1 routing: reference properties + JAX engine parity."""
+import numpy as np
+import pytest
+
+from repro.core import build_mesh, make_scout_fn, minimal_ports, scout_route_ref
+from repro.core.rng import seed_for_scout
+from repro.core.topology import all_xy_paths, xy_path_links
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYP = True
+except Exception:  # pragma: no cover
+    HAVE_HYP = False
+
+
+def test_mesh_tables_consistent():
+    topo = build_mesh(8, 8)
+    assert topo.n_nodes == 64 and topo.n_links == 112  # paper §6.6: 112 links
+    # every link appears on exactly two (node, port) slots, opposite directions
+    counts = np.zeros(topo.n_links, dtype=int)
+    for n in range(topo.n_nodes):
+        for p in range(4):
+            l = topo.port_link[n, p]
+            if l >= 0:
+                counts[l] += 1
+                nb = topo.port_neighbor[n, p]
+                assert topo.port_link[nb, (p + 2) % 4] == l  # OPPOSITE port
+    assert (counts == 2).all()
+
+
+def test_xy_paths_minimal():
+    topo = build_mesh(4, 6)
+    paths, hops = all_xy_paths(topo)
+    for f in range(topo.n_fcs):
+        src = int(topo.fc_node[f])
+        r0, c0 = divmod(src, topo.cols)
+        for n in range(topo.n_nodes):
+            r1, c1 = divmod(n, topo.cols)
+            assert hops[f, n] == abs(r0 - r1) + abs(c0 - c1)
+            p = paths[f, n]
+            assert (p[: hops[f, n]] >= 0).all() and (p[hops[f, n]:] == -1).all()
+
+
+def test_scout_empty_network_is_minimal():
+    """On an idle mesh the scout must find a minimal path (no misroutes)."""
+    topo = build_mesh(8, 8)
+    busy = np.zeros(topo.n_links, dtype=bool)
+    for trial in range(100):
+        rs = np.random.RandomState(trial)
+        src = int(topo.fc_node[rs.randint(8)])
+        dst = int(rs.randint(64))
+        res = scout_route_ref(topo, src, dst, busy, seed_for_scout(1, trial))
+        assert res.success
+        assert res.hops == res.minimal_hops
+        assert res.misroutes == 0 and res.backtracks == 0
+
+
+def test_scout_path_is_connected_and_conflict_free():
+    topo = build_mesh(8, 8)
+    rs = np.random.RandomState(7)
+    found_nonminimal = False
+    for trial in range(400):
+        busy = rs.rand(topo.n_links) < rs.uniform(0, 0.7)
+        src = int(topo.fc_node[rs.randint(8)])
+        dst = int(rs.randint(64))
+        res = scout_route_ref(topo, src, dst, busy.copy(), seed_for_scout(3, trial))
+        if not res.success:
+            continue
+        # no reserved link was previously busy
+        assert not busy[res.path_links].any()
+        # links are distinct (each output port reserved at most once ⇒ no dup)
+        assert len(set(res.path_links.tolist())) == len(res.path_links)
+        # path connects src to dst through neighbors
+        assert res.path_nodes[0] == src and res.path_nodes[-1] == dst
+        if res.hops > res.minimal_hops:
+            found_nonminimal = True
+    assert found_nonminimal, "non-minimal routing never exercised"
+
+
+def test_scout_livelock_bound():
+    """DFS steps are bounded by the livelock rule (≤ ~8·n_nodes)."""
+    topo = build_mesh(8, 8)
+    rs = np.random.RandomState(11)
+    for trial in range(200):
+        busy = rs.rand(topo.n_links) < 0.9
+        src = int(topo.fc_node[rs.randint(8)])
+        dst = int(rs.randint(64))
+        res = scout_route_ref(topo, src, dst, busy, seed_for_scout(5, trial))
+        assert res.steps <= 8 * topo.n_nodes + 8
+
+
+def test_scout_succeeds_iff_reachable():
+    """With a fully idle or fully busy mesh, success is deterministic."""
+    topo = build_mesh(4, 4)
+    idle = np.zeros(topo.n_links, bool)
+    full = np.ones(topo.n_links, bool)
+    assert scout_route_ref(topo, 0, 15, idle, 12345).success
+    r = scout_route_ref(topo, 0, 15, full, 12345)
+    assert not r.success
+    # src == dst trivially succeeds with zero hops even on a busy mesh
+    r2 = scout_route_ref(topo, 5, 5, full, 1)
+    assert r2.success and r2.hops == 0
+
+
+@pytest.mark.parametrize("rows,cols", [(4, 4), (8, 8), (4, 16), (16, 4), (3, 5)])
+def test_jax_engine_matches_reference(rows, cols):
+    topo = build_mesh(rows, cols)
+    fn = make_scout_fn(topo)
+    rs = np.random.RandomState(rows * 100 + cols)
+    for trial in range(60):
+        busy = rs.rand(topo.n_links) < rs.choice([0.0, 0.3, 0.6, 0.9])
+        src = int(topo.fc_node[rs.randint(topo.n_fcs)])
+        dst = int(rs.randint(topo.n_nodes))
+        seed = seed_for_scout(42 + rows, trial)
+        ref = scout_route_ref(topo, src, dst, busy.copy(), seed)
+        out = fn(src, dst, busy, np.uint32(seed))
+        assert bool(out.success) == ref.success, (trial, src, dst)
+        assert int(out.steps) == ref.steps
+        if ref.success:
+            mask = np.zeros(topo.n_links, bool)
+            mask[ref.path_links] = True
+            assert np.array_equal(np.asarray(out.path_mask), mask)
+            assert int(out.hops) == ref.hops
+            assert int(out.misroutes) == ref.misroutes
+
+
+def test_minimal_ports_cases():
+    topo = build_mesh(8, 8)
+    # node (2,3)=19 -> dst (5,6)=46: Diff_x>0, Diff_y>0 -> RIGHT & UP
+    assert set(minimal_ports(topo, 19, 46)) == {0, 1}
+    # dst west of node: LEFT only
+    assert minimal_ports(topo, 19, 17) == [2]
+    # same node: no minimal ports (ejection)
+    assert minimal_ports(topo, 19, 19) == []
+
+
+if HAVE_HYP:
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        rows=st.integers(2, 8),
+        cols=st.integers(2, 8),
+        seed=st.integers(0, 2**31 - 1),
+        density=st.floats(0.0, 1.0),
+    )
+    def test_property_scout_never_reserves_busy_link(rows, cols, seed, density):
+        topo = build_mesh(rows, cols)
+        rs = np.random.RandomState(seed % 100000)
+        busy = rs.rand(topo.n_links) < density
+        src = int(topo.fc_node[rs.randint(topo.n_fcs)])
+        dst = int(rs.randint(topo.n_nodes))
+        res = scout_route_ref(topo, src, dst, busy.copy(), seed_for_scout(seed, 0))
+        if res.success:
+            assert not busy[res.path_links].any()
+            assert res.hops >= res.minimal_hops

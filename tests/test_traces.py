@@ -1,0 +1,73 @@
+"""Trace generator: Table 2/3 statistics must converge to the paper's values."""
+import numpy as np
+import pytest
+
+from repro.traces import MIXES, WORKLOADS, gen_trace, mix_traces
+from repro.traces.generator import to_pages
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYP = True
+except Exception:  # pragma: no cover
+    HAVE_HYP = False
+
+
+@pytest.mark.parametrize("name", sorted(WORKLOADS))
+def test_table2_statistics(name):
+    read_pct, avg_kb, avg_iat = WORKLOADS[name]
+    tr = gen_trace(name, 20000, seed=0)
+    assert np.mean(tr["is_read"]) == pytest.approx(read_pct / 100.0, abs=0.02)
+    assert tr["size_bytes"].mean() / 1024 == pytest.approx(avg_kb, rel=0.05)
+    iat = np.diff(tr["arrival_us"], prepend=0.0)
+    assert iat.mean() == pytest.approx(avg_iat, rel=0.08)
+
+
+def test_traces_are_deterministic():
+    a = gen_trace("hm_0", 500, seed=9)
+    b = gen_trace("hm_0", 500, seed=9)
+    assert np.array_equal(a["offset_bytes"], b["offset_bytes"])
+    assert np.array_equal(a["arrival_us"], b["arrival_us"])
+
+
+def test_offsets_within_footprint():
+    tr = gen_trace("usr_0", 5000, seed=1)
+    assert (tr["offset_bytes"] >= 0).all()
+    assert (tr["offset_bytes"] < tr["footprint_bytes"]).all()
+    assert (tr["size_bytes"] % 4096 == 0).all()
+
+
+@pytest.mark.parametrize("mix", sorted(MIXES))
+def test_mixes_overlay_and_sort(mix):
+    tr = mix_traces(mix, 500, seed=0)
+    assert (np.diff(tr["arrival_us"]) >= 0).all()
+    assert len(tr["arrival_us"]) >= 500  # fast tenants contribute more
+    # mixes have higher intensity than any constituent (Table 3)
+    iat = np.diff(tr["arrival_us"]).mean()
+    assert iat < min(WORKLOADS[w][2] for w in MIXES[mix])
+
+
+def test_to_pages_covers_request():
+    tr = gen_trace("web_1", 300, seed=0)
+    pg = to_pages(tr, 16384)
+    # every request covers its byte range
+    cover = pg["n_pages"] * 16384
+    assert (cover >= tr["size_bytes"]).all()
+    assert (pg["n_pages"] >= 1).all()
+
+
+if HAVE_HYP:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        name=st.sampled_from(sorted(WORKLOADS)),
+        n=st.integers(1, 2000),
+        seed=st.integers(0, 10000),
+        page=st.sampled_from([4096, 16384]),
+    )
+    def test_property_trace_wellformed(name, n, seed, page):
+        tr = gen_trace(name, n, seed=seed)
+        assert len(tr["arrival_us"]) == n
+        assert (np.diff(tr["arrival_us"]) >= 0).all()
+        pg = to_pages(tr, page)
+        assert (pg["offset_page"] * page < tr["footprint_bytes"]).all()
