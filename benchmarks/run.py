@@ -3,6 +3,13 @@
   PYTHONPATH=src python -m benchmarks.run             # quick preset
   PYTHONPATH=src python -m benchmarks.run --full      # all 19+6 workloads
   PYTHONPATH=src python -m benchmarks.run --only fig9 --csv results/
+  PYTHONPATH=src python -m benchmarks.run --designs venice,venice_kscout,ideal
+  PYTHONPATH=src python -m benchmarks.run --json results/BENCH_quick.json
+
+Every sweep phase runs all requested designs through ONE compiled batched
+program (``repro.ssd.sim.simulate_sweep``); ``--json`` records the perf
+trajectory (wall-clock per phase + per-design speedups) as a ``BENCH_*.json``
+artifact so regressions in sweep throughput are visible across commits.
 
 Figures reproduced (as CSV tables; all values also summarized to stdout):
   fig4    prior approaches + ideal vs Baseline (perf-optimized)
@@ -20,17 +27,19 @@ from __future__ import annotations
 
 import argparse
 import csv
+import json
 import os
 import time
 
 import numpy as np
 
+from repro.ssd import DESIGNS as ALL_DESIGNS
 from repro.ssd import cost_optimized, perf_optimized
 from repro.ssd.bench import geomean, run_workload
 from repro.traces import MIXES, WORKLOADS
 
 QUICK_WL = ["proj_3", "src2_1", "hm_0", "prxy_0", "YCSB_B", "ssd-10", "usr_0"]
-DESIGNS = ("baseline", "pssd", "pnssd", "nossd", "venice", "ideal")
+DEFAULT_DESIGNS = ("baseline", "pssd", "pnssd", "nossd", "venice", "ideal")
 N_REQ_QUICK = 2500
 
 
@@ -43,7 +52,7 @@ def _rows_to_csv(path, header, rows):
             w.writerows(rows)
 
 
-def _runs(workloads, cfg, n_req, designs=DESIGNS, seed=0):
+def _runs(workloads, cfg, n_req, designs, seed=0):
     out = {}
     for wl in workloads:
         t0 = time.time()
@@ -53,40 +62,46 @@ def _runs(workloads, cfg, n_req, designs=DESIGNS, seed=0):
     return out
 
 
-def fig4_and_9_and_10_and_13(workloads, n_req, csv_dir):
+def fig4_and_9_and_10_and_13(workloads, n_req, csv_dir, designs):
     rows9, rows10, rows13 = [], [], []
     summary = {}
+    has_ideal = "ideal" in designs  # fig10 normalizes IOPS to the ideal lane
     for cfg in (perf_optimized(), cost_optimized()):
-        runs = _runs(workloads, cfg, n_req)
-        sp = {d: [] for d in DESIGNS}
+        runs = _runs(workloads, cfg, n_req, designs)
+        sp = {d: [] for d in designs}
         for wl, r in runs.items():
-            for d in DESIGNS:
+            for d in designs:
                 s = r.speedup(d)
                 sp[d].append(s)
                 rows9.append([cfg.name, wl, d, f"{s:.3f}"])
-                rows10.append([cfg.name, wl, d, f"{r.iops_norm(d):.3f}"])
+                if has_ideal:
+                    rows10.append([cfg.name, wl, d, f"{r.iops_norm(d):.3f}"])
                 rows13.append(
                     [cfg.name, wl, d,
                      f"{r.results[d].conflict_rate()*100:.2f}"]
                 )
-        summary[cfg.name] = {d: geomean(sp[d]) for d in DESIGNS}
+        summary[cfg.name] = {d: geomean(sp[d]) for d in designs}
         print(f"[fig9/{cfg.name}] geomean speedups: "
-              + " ".join(f"{d}={summary[cfg.name][d]:.2f}x" for d in DESIGNS))
+              + " ".join(f"{d}={summary[cfg.name][d]:.2f}x" for d in designs))
     _rows_to_csv(os.path.join(csv_dir, "fig9_speedup.csv"),
                  ["config", "workload", "design", "speedup"], rows9)
-    _rows_to_csv(os.path.join(csv_dir, "fig10_iops.csv"),
-                 ["config", "workload", "design", "iops_norm_ideal"], rows10)
+    if has_ideal:
+        _rows_to_csv(os.path.join(csv_dir, "fig10_iops.csv"),
+                     ["config", "workload", "design", "iops_norm_ideal"],
+                     rows10)
+    else:
+        print("[fig10] skipped: no 'ideal' lane to normalize against")
     _rows_to_csv(os.path.join(csv_dir, "fig13_conflicts.csv"),
                  ["config", "workload", "design", "conflict_pct"], rows13)
     return summary
 
 
-def fig11_tail_latency(n_req, csv_dir):
+def fig11_tail_latency(n_req, csv_dir, designs):
     cfg = perf_optimized()
     rows = []
     for wl in ("src1_0", "hm_0"):
-        r = run_workload(wl, cfg, designs=DESIGNS, n_requests=n_req)
-        for d in DESIGNS:
+        r = run_workload(wl, cfg, designs=designs, n_requests=n_req)
+        for d in designs:
             p99 = r.results[d].p99_latency_us()
             rows.append([wl, d, f"{p99:.1f}"])
             print(f"[fig11] {wl} {d}: p99={p99:.1f}us")
@@ -94,47 +109,47 @@ def fig11_tail_latency(n_req, csv_dir):
                  ["workload", "design", "p99_latency_us"], rows)
 
 
-def fig12_mixes(n_req, csv_dir, mixes=None):
+def fig12_mixes(n_req, csv_dir, designs, mixes=None):
     cfg = perf_optimized()
     rows = []
-    gm = {d: [] for d in DESIGNS}
+    gm = {d: [] for d in designs}
     for mix in (mixes or sorted(MIXES)):
-        r = run_workload(mix, cfg, designs=DESIGNS, n_requests=n_req)
-        for d in DESIGNS:
+        r = run_workload(mix, cfg, designs=designs, n_requests=n_req)
+        for d in designs:
             s = r.speedup(d)
             gm[d].append(s)
             rows.append([mix, d, f"{s:.3f}"])
     print("[fig12] mixes geomean: "
-          + " ".join(f"{d}={geomean(gm[d]):.2f}x" for d in DESIGNS))
+          + " ".join(f"{d}={geomean(gm[d]):.2f}x" for d in designs))
     _rows_to_csv(os.path.join(csv_dir, "fig12_mixes.csv"),
                  ["mix", "design", "speedup"], rows)
 
 
-def fig14_power_energy(workloads, n_req, csv_dir):
+def fig14_power_energy(workloads, n_req, csv_dir, designs):
     cfg = perf_optimized()
     rows = []
-    agg = {d: ([], []) for d in DESIGNS}
+    agg = {d: ([], []) for d in designs}
     for wl in workloads:
-        r = run_workload(wl, cfg, designs=DESIGNS, n_requests=n_req)
+        r = run_workload(wl, cfg, designs=designs, n_requests=n_req)
         base = r.results["baseline"]
-        for d in DESIGNS:
+        for d in designs:
             p = r.results[d].avg_power_w / base.avg_power_w
             e = r.results[d].energy_j / base.energy_j
             agg[d][0].append(p)
             agg[d][1].append(e)
             rows.append([wl, d, f"{p:.3f}", f"{e:.3f}"])
-    for d in DESIGNS:
+    for d in designs:
         print(f"[fig14] {d}: power={np.mean(agg[d][0]):.3f}x "
               f"energy={np.mean(agg[d][1]):.3f}x of baseline")
     _rows_to_csv(os.path.join(csv_dir, "fig14_power_energy.csv"),
                  ["workload", "design", "power_norm", "energy_norm"], rows)
 
 
-def fig15_sensitivity(n_req, csv_dir):
+def fig15_sensitivity(n_req, csv_dir, designs):
     rows = []
+    designs = tuple(d for d in designs if d != "pnssd")  # needs rows==cols
     for (r_, c_) in ((4, 16), (8, 8), (16, 4)):
         cfg = perf_optimized(rows=r_, cols=c_)
-        designs = ("baseline", "pssd", "nossd", "venice", "ideal")  # no pnssd
         gm = {d: [] for d in designs}
         for wl in ("proj_3", "src2_1", "YCSB_B"):
             run = run_workload(wl, cfg, designs=designs, n_requests=n_req)
@@ -198,6 +213,21 @@ def sec31_example(csv_dir):
                   ["different_channels", f"{free:.2f}", 7.01]])
 
 
+def _parse_designs(arg: str | None):
+    if not arg:
+        return DEFAULT_DESIGNS
+    if arg == "all":
+        return ALL_DESIGNS
+    designs = tuple(d.strip() for d in arg.split(",") if d.strip())
+    unknown = [d for d in designs if d not in ALL_DESIGNS]
+    if unknown:
+        raise SystemExit(f"unknown designs {unknown}; registry: {ALL_DESIGNS}")
+    if "baseline" not in designs:  # speedups/energy are baseline-normalized
+        print("[benchmarks] adding 'baseline' lane (normalization reference)")
+        designs = ("baseline",) + designs
+    return designs
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
@@ -206,29 +236,70 @@ def main() -> None:
                     help="fig4|fig9|fig11|fig12|fig14|fig15|tab4|sec31")
     ap.add_argument("--csv", default="results")
     ap.add_argument("--n-req", type=int, default=None)
+    ap.add_argument("--designs", default=None, metavar="D1,D2,...",
+                    help="design lanes to sweep (default: the paper's six; "
+                         "'all' = every registered design incl. ablations)")
+    ap.add_argument("--json", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="write a BENCH_*.json perf-trajectory artifact "
+                         "(wall-clock per phase + per-design speedups)")
     args = ap.parse_args()
 
+    designs = _parse_designs(args.designs)
     workloads = sorted(WORKLOADS) if args.full else QUICK_WL
     n_req = args.n_req or (None if args.full else N_REQ_QUICK)
     mixes = None if args.full else ["mix1", "mix5"]
     t0 = time.time()
+    phases: dict[str, float] = {}
+    speedups = {}
+
+    def phase(name, fn, *a, **kw):
+        t = time.time()
+        out = fn(*a, **kw)
+        phases[name] = round(time.time() - t, 2)
+        return out
 
     run_all = args.only is None
     if run_all or args.only in ("fig4", "fig9", "fig10", "fig13"):
-        fig4_and_9_and_10_and_13(workloads, n_req, args.csv)
+        speedups = phase("fig4_9_10_13", fig4_and_9_and_10_and_13,
+                         workloads, n_req, args.csv, designs)
     if run_all or args.only == "fig11":
-        fig11_tail_latency(n_req, args.csv)
+        phase("fig11", fig11_tail_latency, n_req, args.csv, designs)
     if run_all or args.only == "fig12":
-        fig12_mixes(n_req, args.csv, mixes)
+        phase("fig12", fig12_mixes, n_req, args.csv, designs, mixes)
     if run_all or args.only == "fig14":
-        fig14_power_energy(workloads[:4], n_req, args.csv)
+        phase("fig14", fig14_power_energy, workloads[:4], n_req, args.csv,
+              designs)
     if run_all or args.only == "fig15":
-        fig15_sensitivity(n_req, args.csv)
+        phase("fig15", fig15_sensitivity, n_req, args.csv, designs)
     if run_all or args.only == "tab4":
-        tab4_overheads(args.csv)
+        phase("tab4", tab4_overheads, args.csv)
     if run_all or args.only == "sec31":
-        sec31_example(args.csv)
-    print(f"[benchmarks] total {time.time()-t0:.0f}s; CSVs in {args.csv}/")
+        phase("sec31", sec31_example, args.csv)
+    total = round(time.time() - t0, 2)
+    print(f"[benchmarks] total {total}s; CSVs in {args.csv}/")
+
+    if args.json is not None:
+        path = args.json or os.path.join(
+            args.csv, f"BENCH_{time.strftime('%Y%m%d_%H%M%S')}.json"
+        )
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        artifact = {
+            "preset": "full" if args.full else "quick",
+            "only": args.only,
+            "n_req": n_req,
+            "designs": list(designs),
+            "workloads": workloads,
+            "phases_s": phases,
+            "total_s": total,
+            "speedups_geomean": {
+                cfg: {d: round(v, 4) for d, v in per.items()}
+                for cfg, per in speedups.items()
+            },
+        }
+        with open(path, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"[benchmarks] perf trajectory written to {path}")
 
 
 if __name__ == "__main__":

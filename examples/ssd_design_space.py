@@ -1,6 +1,8 @@
 """Design-space exploration: mesh geometry x routing policy, beyond the
-paper's three points (fig 15) — including the minimal-routing ablation and
-the circuit-hold variant.
+paper's three points (fig 15) — including the minimal-routing ablation, the
+circuit-hold variant and the k-scout policy.  Every geometry row is ONE
+batched sweep per cost class (see repro.ssd.sim.simulate_sweep); adding a
+design to the sweep is a registry name, not new simulator code.
 
   PYTHONPATH=src python examples/ssd_design_space.py
 """
@@ -10,8 +12,8 @@ from repro.ssd import perf_optimized
 from repro.ssd.bench import geomean, run_workload
 
 WORKLOADS = ["proj_3", "src2_1"]
-DESIGNS = ("baseline", "nossd", "venice_minimal", "venice_hold", "venice",
-           "ideal")
+DESIGNS = ("baseline", "nossd", "venice_minimal", "venice_hold",
+           "venice_kscout", "venice", "ideal")
 
 print(f"{'mesh':8s} " + " ".join(f"{d:>14s}" for d in DESIGNS))
 for (rows, cols) in ((4, 16), (8, 8), (16, 4)):
@@ -27,3 +29,4 @@ for (rows, cols) in ((4, 16), (8, 8), (16, 4)):
           + f"   ({time.time()-t0:.0f}s)")
 print("\nvenice_minimal = Algorithm 1 without misrouting (adaptivity ablation)")
 print("venice_hold    = circuit held across tR (link-hours ablation)")
+print("venice_kscout  = 3 scouts race, fewest-hop success wins (beyond-paper)")

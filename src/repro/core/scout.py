@@ -90,12 +90,16 @@ def scout_route(
     dst: jnp.ndarray,
     link_busy: jnp.ndarray,
     seed: jnp.ndarray,
-    allow_nonminimal: bool = True,
+    allow_nonminimal: bool | jnp.ndarray = True,
 ) -> ScoutOut:
     """Route one scout; returns the reserved path as a link mask.
 
-    ``link_busy`` (bool [n_links]) is the occupancy snapshot at the scout's
-    send time.  Purely functional — the caller commits ``path_mask``.
+    ``link_busy`` (bool, at least [n_links] — padded tails are ignored) is
+    the occupancy snapshot at the scout's send time.  Purely functional —
+    the caller commits ``path_mask``.  ``allow_nonminimal`` may be a traced
+    bool (the table-driven simulator batches designs that differ in it);
+    ``src == dst`` degenerates to an immediate 0-hop success, which is how
+    routing-disabled (bus) lanes share this engine.
     """
     cap = t.stack_cap
     st = ScoutState(
@@ -132,8 +136,8 @@ def scout_route(
         ports4 = jnp.arange(4, dtype=jnp.int32)
         fmis = jax.vmap(lambda p: _port_free(t, st, st.cur, p))(ports4)
         fmis &= ports4 != st.entry
-        if not allow_nonminimal:
-            fmis = jnp.zeros_like(fmis)
+        # static or traced flag: minimal-only mode masks every misroute port
+        fmis &= jnp.asarray(allow_nonminimal)
         n_mis = fmis.sum()
 
         use_min = n_min > 0

@@ -72,6 +72,10 @@ def step_math(state, busy, tried, port_link, port_neighbor, cols, allow_nonminim
     All inputs are int32/bool jnp arrays:
       state [B, 8], busy [B, L], tried [B, 4N],
       port_link [N, 4], port_neighbor [N, 4].
+    ``allow_nonminimal`` may be a static bool or a per-scout bool vector
+    [B] (the table-driven design sweep batches scouts whose routing mode
+    differs).  Degenerate/padded scouts are fine: ``cur == dst`` finishes
+    immediately and off-mesh ports (link id -1) are never free.
     Returns (state', busy', tried').
     """
     cur = state[:, 0]
@@ -112,8 +116,8 @@ def step_math(state, busy, tried, port_link, port_neighbor, cols, allow_nonminim
     fmin = jnp.stack([jnp.any(fmin0, 1), jnp.any(fmin1, 1)], axis=1)  # [B, 2]
     n_min = jnp.sum(fmin.astype(jnp.int32), axis=1)
     fmis = free4 & (iota4 != entry[:, None])
-    if not allow_nonminimal:
-        fmis = jnp.zeros_like(fmis)
+    allow = jnp.asarray(allow_nonminimal)
+    fmis &= allow.reshape(-1, 1)  # scalar or per-scout [B] flag
     n_mis = jnp.sum(fmis.astype(jnp.int32), axis=1)
 
     use_min = n_min > 0

@@ -1,6 +1,7 @@
-"""SSD substrate: Table-1 configs, FTL, flash-array geometry, and the jitted
-discrete-resource simulator for all six evaluated designs (Baseline, pSSD,
-pnSSD, NoSSD, Venice, path-conflict-free ideal)."""
+"""SSD substrate: Table-1 configs, FTL, flash-array geometry, the declarative
+design registry, and the jitted discrete-resource simulator that runs any set
+of registered designs (baseline, pSSD, pnSSD, NoSSD, Venice + ablations,
+path-conflict-free ideal) as one batched program."""
 from repro.ssd.config import (
     SSDConfig,
     PowerModel,
@@ -8,10 +9,13 @@ from repro.ssd.config import (
     perf_optimized,
     TICK_NS,
 )
-from repro.ssd.sim import DESIGNS, SimResult, simulate
+from repro.ssd.designs import DesignSpec, LaneTables, REGISTRY, lower_designs
+from repro.ssd.sim import DESIGNS, SimResult, simulate, simulate_sweep
 from repro.ssd.ftl import FTL, Transactions, decompose_trace
 
 __all__ = [
     "SSDConfig", "PowerModel", "cost_optimized", "perf_optimized", "TICK_NS",
-    "DESIGNS", "SimResult", "simulate", "FTL", "Transactions", "decompose_trace",
+    "DESIGNS", "DesignSpec", "LaneTables", "REGISTRY", "lower_designs",
+    "SimResult", "simulate", "simulate_sweep", "FTL", "Transactions",
+    "decompose_trace",
 ]

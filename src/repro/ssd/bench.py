@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.ssd.config import SSDConfig
 from repro.ssd.ftl import decompose_trace
-from repro.ssd.sim import SimResult, simulate
+from repro.ssd.sim import SimResult, simulate_sweep
 from repro.traces.generator import default_n_requests, to_pages, trace_for
 
 
@@ -56,6 +56,21 @@ def accelerate(trace, cfg: SSDConfig, target_util: float = 1.5) -> tuple:
     return trace, factor
 
 
+# Completed runs, keyed by every input that affects the result.  Benchmark
+# presets revisit the same (workload, config) pair across figure phases
+# (fig9's runs serve fig10/13/14 and part of fig11); the sweep is
+# deterministic, so memoizing whole WorkloadRuns removes that duplicate
+# simulation work.  Bounded: evicts oldest beyond _RUN_CACHE_MAX entries.
+_RUN_CACHE: dict = {}
+_RUN_CACHE_MAX = 24
+
+
+def _cache_put(key, run) -> None:
+    if len(_RUN_CACHE) >= _RUN_CACHE_MAX:
+        _RUN_CACHE.pop(next(iter(_RUN_CACHE)))
+    _RUN_CACHE[key] = run
+
+
 def run_workload(
     name: str,
     cfg: SSDConfig,
@@ -64,6 +79,25 @@ def run_workload(
     target_util: float | None = 1.5,
     seed: int = 0,
 ) -> WorkloadRun:
+    designs = tuple(designs)
+    key = (name, cfg, designs, n_requests, target_util, seed)
+    hit = _RUN_CACHE.get(key)
+    if hit is not None:
+        return hit
+    # Sweep lanes are independent (the parity tests assert a lane is
+    # bit-identical to its standalone simulation), so a cached run over a
+    # SUPERSET of designs serves any subset — e.g. fig15's 8x8 leg reuses
+    # fig9's runs even though it drops pnssd.
+    for (n2, c2, d2, r2, u2, s2), run in _RUN_CACHE.items():
+        if ((n2, c2, r2, u2, s2) == (name, cfg, n_requests, target_util, seed)
+                and set(designs) <= set(d2)):
+            sub = WorkloadRun(
+                name=run.name, cfg=run.cfg, accel=run.accel,
+                n_requests=run.n_requests,
+                results={d: run.results[d] for d in designs},
+            )
+            _cache_put(key, sub)
+            return sub
     n = n_requests or default_n_requests(name)
     trace = trace_for(name, n, seed)
     accel = 1.0
@@ -71,10 +105,15 @@ def run_workload(
         trace, accel = accelerate(trace, cfg, target_util)
     pages = to_pages(trace, cfg.page_bytes)
     txns = decompose_trace(cfg, pages, footprint_pages=int(pages["footprint_pages"]))
-    results = {d: simulate(cfg, txns, d, seed=seed + 7) for d in designs}
-    return WorkloadRun(
+    # one batched jitted program per cost class serves every design lane
+    results = dict(
+        zip(designs, simulate_sweep(cfg, txns, designs, seeds=seed + 7))
+    )
+    run = WorkloadRun(
         name=name, cfg=cfg, accel=accel, n_requests=txns.n_requests, results=results
     )
+    _cache_put(key, run)
+    return run
 
 
 def geomean(xs) -> float:

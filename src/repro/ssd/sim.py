@@ -1,4 +1,4 @@
-"""Jitted discrete-resource SSD simulator for the six evaluated designs.
+"""Jitted discrete-resource SSD simulator over the table-driven design substrate.
 
 Replaces MQSim's event-driven C++ core with a ``lax.scan`` over page-level
 transactions in arrival order: each step computes the transaction's start time
@@ -8,49 +8,65 @@ stats.  Venice's path reservation runs the Algorithm-1 scout engine
 (``core/scout.py``) inside the scan, retrying at the next link-free event when
 a scout fails — exactly the paper's "retry immediately" policy (§4.2).
 
-Designs
+There is exactly ONE scan step function.  Designs are not code paths: each
+design in ``repro.ssd.designs.REGISTRY`` lowers to padded tables
+(``LaneTables``) over a unified resource vector ``[links | FCs | chips]``,
+and the step consumes only those arrays — shared buses are 1-link "meshes"
+with routing disabled (the scout degenerates to a zero-length path), pnSSD
+is two candidate 1-link masks, NoSSD is a static XY-path mask, Venice builds
+its mask with the scout at runtime.  ``simulate_sweep`` vmaps the scan over
+the design (and seed) axis, so an entire design-space sweep shares one
+compiled executable per (config, padded length, cost class) — lanes are
+grouped into statically-routed vs scout-routed classes because batched
+while-loops charge every lane the max iteration count of its batch;
+``simulate`` is the sweep of a single lane.  Executables take the design
+tables as *arguments*, so they are design-agnostic: changing the design set
+never recompiles.
+
+Designs (see ``designs.REGISTRY`` for the spec + ablation docs of each)
   baseline        multi-channel shared bus (Table 1)
   pssd            Kim+ [15]: packetized, 2x channel bandwidth
   pnssd           Kim+ [15]: row+column shared buses (two paths per chip)
   nossd           Tavakkol+ [38]: 2D mesh, deterministic XY routing
   venice          the paper: scout path reservation + non-minimal adaptive
   venice_minimal  ablation: Venice with minimal-only adaptive routing
-  venice_release  beyond-paper: release the circuit during tR, re-scout for
-                  the read-data phase (recovers link-hours; §Perf)
+  venice_hold     ablation: circuit held across CMD+tR+transfer (the paper's
+                  per-transfer reservation recovers these link-hours)
+  venice_kscout   beyond-paper: race 3 scouts, commit the fewest-hop success
   ideal           path-conflict-free: a private channel per chip
 
 Approximations vs MQSim (all documented in DESIGN.md §3): in-order commit per
-transaction; single-gap backfill per shared bus (captures CMD-during-tR and
-one-deep data backfill — the dominant pipelining in a real channel); NoSSD's
-buffered wormhole modeled as transient circuits per packet phase.
+transaction; single-gap backfill per shared resource (captures CMD-during-tR
+and one-deep data backfill — the dominant pipelining in a real channel);
+NoSSD's buffered wormhole modeled as transient circuits per packet phase.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.scout import make_tables, scout_route
-from repro.core.topology import MeshTopology, build_mesh, all_xy_paths
+from repro.core.topology import build_mesh
 from repro.ssd.config import SSDConfig, TICK_NS
-
-DESIGNS = (
-    "baseline",
-    "pssd",
-    "pnssd",
-    "nossd",
-    "venice",
-    "venice_minimal",
-    "venice_hold",
-    "venice_kscout",
-    "ideal",
+from repro.ssd.designs import (
+    DESIGNS,
+    REGISTRY,
+    lower_designs,
+    resolve_specs,
+    sweep_layout_geom,
 )
 
+__all__ = [
+    "DESIGNS", "TxnArrays", "StepOut", "SimResult", "simulate",
+    "simulate_sweep",
+]
+
 _BIG = np.int32(2**30)
+_MAX_TRIES = 64  # scout retry bound per reservation
 
 KIND_READ, KIND_WRITE, KIND_ERASE = 0, 1, 2
 
@@ -83,14 +99,14 @@ class StepOut(NamedTuple):
 # ---------------------------------------------------------------------------
 # resource scheduling primitives
 #
-# Every time-shared resource (bus channel, mesh link, flash controller) is a
-# triple of arrays (free_at, gap_s, gap_e): busy through ``free_at`` except
-# one remembered idle gap [gap_s, gap_e).  The in-order scan can commit
-# transfers far in the future (e.g. a write waiting on a 100 us tPROG), and
-# the remembered gap keeps the resource's *current* idle capacity usable by
-# later transactions instead of ratcheting free_at forward — the one-gap
-# interval model is what keeps this O(1)-state simulator faithful to an
-# event-driven scheduler to first order.
+# Every time-shared resource (bus channel, mesh link, flash controller, chip
+# I/O interface) is a triple of arrays (free_at, gap_s, gap_e): busy through
+# ``free_at`` except one remembered idle gap [gap_s, gap_e).  The in-order
+# scan can commit transfers far in the future (e.g. a write waiting on a
+# 100 us tPROG), and the remembered gap keeps the resource's *current* idle
+# capacity usable by later transactions instead of ratcheting free_at
+# forward — the one-gap interval model is what keeps this O(1)-state
+# simulator faithful to an event-driven scheduler to first order.
 # ---------------------------------------------------------------------------
 
 
@@ -161,12 +177,12 @@ def _commit_mask(res, mask, s, e2, enable):
     )
 
 
-def _sched_gap(chan, ch, e, d, enable):
-    """Schedule a d-tick usage of resource ``ch`` at the earliest time >= e."""
-    s = _avail1(chan, ch, e, d)
+def _sched_gap(res, i, e, d, enable):
+    """Schedule a d-tick usage of resource ``i`` at the earliest time >= e."""
+    s = _avail1(res, i, e, d)
     s = jnp.where(enable, s, e)
-    chan = _commit1(chan, ch, s, s + d, enable)
-    return s, chan
+    res = _commit1(res, i, s, s + d, enable)
+    return s, res
 
 
 def _triple(n: int):
@@ -174,293 +190,131 @@ def _triple(n: int):
     return (z, z, z)
 
 
-# ---------------------------------------------------------------------------
-# shared-bus designs
-# ---------------------------------------------------------------------------
-
-
-def _bus_step(cfg: SSDConfig, chan_of_tx, xfer_of_tx, ovh: int):
-    """Build the scan step for a pure shared-bus design.
-
-    ``ovh``: per-bus-phase protocol overhead (legacy ONFI bus only)."""
-
-    def step(state, tx: TxnArrays):
-        plane_free, chan = state
-        ch = chan_of_tx(tx)
-        xfer = xfer_of_tx(tx)
-        is_read = tx.kind == KIND_READ
-        d0 = ovh + cfg.t_cmd + jnp.where(is_read, 0, xfer)
-        e0 = jnp.maximum(tx.arrival, plane_free[tx.plane])
-        s0, chan = _sched_gap(chan, ch, e0, d0, tx.valid)
-        phase0_end = s0 + d0
-        op_end = phase0_end + tx.op_ticks
-        # read data phase (zero-length & disabled otherwise)
-        d1 = ovh + xfer
-        s1, chan = _sched_gap(chan, ch, op_end, d1, tx.valid & is_read)
-        done = jnp.where(is_read, s1 + d1, op_end)
-        plane_free = plane_free.at[tx.plane].set(
-            jnp.where(tx.valid, done, plane_free[tx.plane])
-        )
-        wait = (s0 - e0) + jnp.where(is_read, s1 - op_end, 0)
-        out = StepOut(
-            completion=done,
-            wait=wait,
-            conflict=wait > 0,
-            hops=jnp.int32(0),
-            tries=jnp.int32(1),
-            scout_steps=jnp.int32(0),
-            misroutes=jnp.int32(0),
-            bus_hold=d0 + jnp.where(is_read, d1, 0),
-            link_hold=jnp.int32(0),
-        )
-        return (plane_free, chan), out
-
-    return step
-
-
-def _pnssd_step(cfg: SSDConfig, topo: MeshTopology):
-    """pnSSD: each chip reachable over its row bus or its column bus.
-
-    The controller keeps the baseline's 8 flash controllers: FC ``i`` drives
-    horizontal channel ``i`` and vertical channel ``i``, one transfer at a
-    time — pnSSD adds *path diversity*, not transfer engines [15]."""
-
-    rows = topo.rows
-
-    def xfer_of(tx):
-        return _xfer_bus(cfg, tx.nbytes, 1.0)
-
-    def step(state, tx: TxnArrays):
-        plane_free, chan, chips, fcs = state
-        col = tx.node % topo.cols
-        ch_row = tx.row
-        ch_col = rows + col
-        xfer = xfer_of(tx)
-        is_read = tx.kind == KIND_READ
-        d0 = cfg.t_cmd + jnp.where(is_read, 0, xfer)  # packetized: no bus ovh
-        e0 = jnp.maximum(tx.arrival, plane_free[tx.plane])
-
-        def sched_on(ch, fc):
-            # the chip's single I/O interface gates both of its buses, and
-            # the owning FC must be free to drive the transfer
-            e0c = jnp.maximum(e0, _avail1(chips, tx.node, e0, d0))
-            e0c = jnp.maximum(e0c, _avail1(fcs, fc, e0c, d0))
-            s0, chan1 = _sched_gap(chan, ch, e0c, d0, tx.valid)
-            chips1 = _commit1(chips, tx.node, s0, s0 + d0, tx.valid)
-            fcs1 = _commit1(fcs, fc, s0, s0 + d0, tx.valid)
-            op_end = s0 + d0 + tx.op_ticks
-            e1 = jnp.maximum(op_end, _avail1(chips1, tx.node, op_end, xfer))
-            e1 = jnp.maximum(e1, _avail1(fcs1, fc, e1, xfer))
-            s1, chan1 = _sched_gap(chan1, ch, e1, xfer, tx.valid & is_read)
-            chips1 = _commit1(chips1, tx.node, s1, s1 + xfer, tx.valid & is_read)
-            fcs1 = _commit1(fcs1, fc, s1, s1 + xfer, tx.valid & is_read)
-            done = jnp.where(is_read, s1 + xfer, op_end)
-            wait = (s0 - e0) + jnp.where(is_read, s1 - op_end, 0)
-            return done, wait, chan1, chips1, fcs1
-
-        done_r, wait_r, chan_r, chips_r, fcs_r = sched_on(ch_row, ch_row)
-        done_c, wait_c, chan_c, chips_c, fcs_c = sched_on(ch_col, col)
-        use_row = done_r <= done_c
-        done = jnp.where(use_row, done_r, done_c)
-        wait = jnp.where(use_row, wait_r, wait_c)
-        chan = jax.tree_util.tree_map(
-            lambda a, b: jnp.where(use_row, a, b), chan_r, chan_c
-        )
-        chips = jax.tree_util.tree_map(
-            lambda a, b: jnp.where(use_row, a, b), chips_r, chips_c
-        )
-        fcs = jax.tree_util.tree_map(
-            lambda a, b: jnp.where(use_row, a, b), fcs_r, fcs_c
-        )
-        plane_free = plane_free.at[tx.plane].set(
-            jnp.where(tx.valid, done, plane_free[tx.plane])
-        )
-        out = StepOut(
-            completion=done,
-            wait=wait,
-            conflict=wait > 0,
-            hops=jnp.int32(0),
-            tries=jnp.int32(1),
-            scout_steps=jnp.int32(0),
-            misroutes=jnp.int32(0),
-            bus_hold=d0 + jnp.where(is_read, xfer, 0),
-            link_hold=jnp.int32(0),
-        )
-        return (plane_free, chan, chips, fcs), out
-
-    return step
-
-
-# ---------------------------------------------------------------------------
-# mesh designs (NoSSD / Venice)
-# ---------------------------------------------------------------------------
-
-
 def _ceil_div(a, b):
     return (a + b - 1) // b
 
 
-def _xfer_bus(cfg: SSDConfig, nbytes, mult):
-    """Shared-channel transfer ticks (rational arithmetic in ns)."""
-    ns_num = nbytes.astype(jnp.int32) * 1000  # fits: nbytes <= ~1 MB
-    ns_den = jnp.int32(round(cfg.chan_gbps * mult * 1000))  # B/ns * 1000
-    ns = _ceil_div(ns_num, ns_den)
-    return _ceil_div(ns, TICK_NS).astype(jnp.int32)
+# ---------------------------------------------------------------------------
+# the one scan step — consumes only LaneTables arrays
+# ---------------------------------------------------------------------------
 
 
-def _xfer_link(cfg: SSDConfig, nbytes, hops):
-    """Eq. (1): (distance + size/width) * link_lat, in ticks."""
-    ns = (nbytes + hops).astype(jnp.int32)  # 1 B/ns, 1 hop = 1 ns pipeline fill
-    return _ceil_div(ns, TICK_NS).astype(jnp.int32)
+# Per-design scalars that are promoted to compile-time constants when every
+# lane of a sweep group agrees on the value (always true for 1-lane
+# ``simulate`` and the common homogeneous sweeps).  XLA then folds the
+# selects/arithmetic and dead-code-eliminates the untaken design variant's
+# subgraph, so a homogeneous program is as lean as a hand-written one,
+# while heterogeneous sweeps keep the scalars traced and stay fully generic.
+_PROMOTABLE = (
+    "hold", "allow_nonmin", "n_scouts", "fc_nearest", "count_bus",
+    "ovh", "cmd_base_ns", "xfer_num", "xfer_den", "hop_ns",
+    "d_est_hops", "d_est_pad",
+)
 
 
-def _cmd_link(cfg: SSDConfig, hops):
-    ns = jnp.int32(8) + hops  # 8-byte command packet
-    return jnp.maximum(_ceil_div(ns, TICK_NS).astype(jnp.int32), 1)
+def _make_step(lay, stables, scout_hop_ns: int, n_planes: int, k_max: int,
+               has_static: bool, fixed: tuple):
+    """Build the design-agnostic scan step.
 
+    ``sp`` below is one lane's view of :class:`LaneTables` (the design axis
+    is handled by ``vmap`` in ``_build_sweep``); everything the step knows
+    about the design comes from those arrays.  The only static knobs are
+    ``k_max`` (max scouts raced), the cost-class flag ``has_static`` (a
+    statically-routed group compiles no scout machinery and a scout group
+    no candidate scheduling), and ``fixed`` (values of ``_PROMOTABLE``
+    scalars shared by every lane, or None when mixed) — each class's
+    program is as lean as the seed's hand-written per-design steps.
 
-def _fc_select(fcs, dist_to_dst, tcand, d_est):
-    """Paper §4.2: closest FC *available now*, else the earliest-available FC
-    (availability = can host a d_est-tick transfer, gap-aware)."""
-    avail = _avail_all(fcs, tcand, d_est)  # [n_fcs]
-    free = avail <= tcand
-    any_free = jnp.any(free)
-    by_dist = jnp.argmin(jnp.where(free, dist_to_dst, _BIG))
-    by_time = jnp.argmin(avail)
-    fc = jnp.where(any_free, by_dist, by_time).astype(jnp.int32)
-    t0 = jnp.maximum(tcand, avail[fc])
-    return fc, t0, any_free
+    Returns ``(init_state, step)``; the two classes carry different scan
+    state (the static class schedules over one unified resource vector, the
+    scout class over separate link/FC/chip pools, narrow like the original
+    hand-written Venice step).
+    """
+    L0, F0, R_pad = lay.L_pad, lay.F_pad, lay.R_pad
+    n_fcs = lay.rows
+    fixed = dict(zip(_PROMOTABLE, fixed))
 
+    def fx(sp, name):
+        v = fixed[name]
+        return getattr(sp, name) if v is None else v
 
-def _nossd_step(cfg: SSDConfig, topo: MeshTopology):
-    """NoSSD [38]: packet-switched mesh, deterministic XY routing.
+    def cmd_ticks(sp, hops):
+        ns = fx(sp, "cmd_base_ns") + hops * fx(sp, "hop_ns")
+        return jnp.maximum(_ceil_div(ns, TICK_NS), 1).astype(jnp.int32)
 
-    Each packet phase (command forward; data back) occupies the XY path as a
-    transient circuit.  FCs are pipelined processors like baseline channel
-    controllers: busy only while a packet of theirs is in flight (single-gap
-    backfill lets the FC interleave other requests during tR)."""
-    paths_np, hops_np = all_xy_paths(topo)
-    # [n_fcs, n_nodes, n_links] bool path masks
-    masks = np.zeros((topo.n_fcs, topo.n_nodes, topo.n_links), dtype=bool)
-    for f in range(topo.n_fcs):
-        for n in range(topo.n_nodes):
-            lk = paths_np[f, n]
-            masks[f, n, lk[lk >= 0]] = True
-    masks = jnp.asarray(masks)
-    hops_t = jnp.asarray(hops_np, dtype=jnp.int32)
-    dist = jnp.asarray(hops_np, dtype=jnp.int32)  # XY dist == manhattan here
+    def xfer_ticks(sp, nbytes, hops):
+        ns = _ceil_div(nbytes * fx(sp, "xfer_num"), fx(sp, "xfer_den"))
+        ns = ns + hops * fx(sp, "hop_ns")
+        return _ceil_div(ns, TICK_NS).astype(jnp.int32)
 
-    def path_sched(links, mask, e, d):
-        """Earliest common start >= e for a d-tick transient circuit on the
-        masked path.  Per-link availability first; if the joint candidate
-        doesn't fit everywhere, fall back to the path's free_at tail."""
-        avail = _avail_all(links, e, d)
+    def path_sched(res, mask, e, d):
+        """Earliest common start >= e for a d-tick usage of every masked
+        resource.  Per-resource availability first; if the joint candidate
+        doesn't fit everywhere, fall back to the masked free_at tail."""
+        avail = _avail_all(res, e, d)
         s1 = jnp.max(jnp.where(mask, avail, 0))
         s1 = jnp.maximum(s1, e)
-        ok = ~jnp.any(_busy_at(links, s1, d) & mask)
-        s_tail = jnp.maximum(e, jnp.max(jnp.where(mask, links[0], 0)))
+        ok = ~jnp.any(_busy_at(res, s1, d) & mask)
+        s_tail = jnp.maximum(e, jnp.max(jnp.where(mask, res[0], 0)))
         return jnp.where(ok, s1, s_tail)
 
-    def step(state, tx: TxnArrays):
-        plane_free, fcs, links, chips = state
-        tcand = jnp.maximum(tx.arrival, plane_free[tx.plane])
-        is_read = tx.kind == KIND_READ
-        d_est = _xfer_link(cfg, tx.nbytes, 6)
-        fc, t0, any_free = _fc_select(fcs, dist[:, tx.node], tcand, d_est)
-        mask = masks[fc, tx.node]
-        hops = hops_t[fc, tx.node]
-        cmd = _cmd_link(cfg, hops)
-        xfer = _xfer_link(cfg, tx.nbytes, hops)
+    def fc_select(avail, dist_row, tcand):
+        """Paper §4.2: closest FC *available now*, else earliest-available
+        (availability = can host a d_est-tick transfer, gap-aware)."""
+        free_now = avail <= tcand
+        any_free = jnp.any(free_now)
+        by_dist = jnp.argmin(jnp.where(free_now, dist_row, _BIG))
+        by_time = jnp.argmin(avail)
+        fc = jnp.where(any_free, by_dist, by_time).astype(jnp.int32)
+        t0 = jnp.maximum(tcand, avail[fc])
+        return fc, t0
 
-        # phase 0: command (reads) / command+data (writes, erases) forward
-        d0 = cmd + jnp.where(is_read, 0, xfer)
-        e0 = jnp.maximum(t0, _avail1(chips, tx.node, t0, d0))
-        s0 = path_sched(links, mask, e0, d0)
-        s0 = jnp.maximum(s0, _avail1(fcs, fc, s0, d0))  # FC must drive it
-        p0_end = s0 + d0
-        links = _commit_mask(links, mask, s0, p0_end, tx.valid)
-        fcs = _commit1(fcs, fc, s0, p0_end, tx.valid)
-        chips = _commit1(chips, tx.node, s0, p0_end, tx.valid)
-        op_end = p0_end + tx.op_ticks
-        # phase 1: read-data packet back over the same XY path
-        e1 = jnp.maximum(op_end, _avail1(chips, tx.node, op_end, xfer))
-        s1 = path_sched(links, mask, e1, xfer)
-        s1 = jnp.maximum(s1, _avail1(fcs, fc, s1, xfer))
-        p1_end = s1 + xfer
-        links = _commit_mask(links, mask, s1, p1_end, tx.valid & is_read)
-        fcs = _commit1(fcs, fc, s1, p1_end, tx.valid & is_read)
-        chips = _commit1(chips, tx.node, s1, p1_end, tx.valid & is_read)
-        done = jnp.where(is_read, p1_end, op_end)
-        plane_free = plane_free.at[tx.plane].set(
-            jnp.where(tx.valid, done, plane_free[tx.plane])
-        )
+    def eval_static_cand(sp, res, tx, is_read, t0, fc, cand, enable):
+        """One statically-routed candidate: phase 0 (command, +data for
+        writes), flash op, phase 1 (read data) on one combined mask."""
+        mask = sp.cmask[fc, tx.node, cand]
+        hops = sp.hops[fc, tx.node, cand]
+        cmd = cmd_ticks(sp, hops)
+        xfer = xfer_ticks(sp, tx.nbytes, hops)
+        ovh = fx(sp, "ovh")
+        d0 = ovh + cmd + jnp.where(is_read, 0, xfer)
+        s0 = path_sched(res, mask, t0, d0)
+        res = _commit_mask(res, mask, s0, s0 + d0, enable)
+        op_end = s0 + d0 + tx.op_ticks
+        d1 = ovh + xfer
+        s1 = path_sched(res, mask, op_end, d1)
+        res = _commit_mask(res, mask, s1, s1 + d1, enable & is_read)
+        done = jnp.where(is_read, s1 + d1, op_end)
         wait = (s0 - t0) + jnp.where(is_read, s1 - op_end, 0)
-        out = StepOut(
-            completion=done,
-            wait=wait,
-            conflict=wait > 0,
-            hops=hops,
-            tries=jnp.int32(1),
-            scout_steps=jnp.int32(0),
-            misroutes=jnp.int32(0),
-            bus_hold=jnp.int32(0),
-            link_hold=hops * (d0 + jnp.where(is_read, xfer, 0)),
-        )
-        return (plane_free, fcs, links, chips), out
+        occ = d0 + jnp.where(is_read, d1, 0)  # resource-held ticks
+        return res, done, wait, occ, hops
 
-    return step
-
-
-def _venice_step(
-    cfg: SSDConfig,
-    topo: MeshTopology,
-    allow_nonminimal: bool = True,
-    hold_during_op: bool = False,
-    max_tries: int = 64,
-    n_scouts: int = 1,
-):
-    """Venice (§4): per-*transfer* path reservation via Algorithm-1 scouts.
-
-    The reserved bidirectional circuit serves the data transfer — forward for
-    writes (command+data), backward for reads (§4.2).  A read's command is a
-    scout-sized packet delivered without a standing reservation (transient
-    per-hop occupancy, like the scout itself); the data-phase scout is sent
-    when tR completes, so links and the FC are never parked across tR.
-    ``hold_during_op=True`` gives the conservative variant that keeps one
-    circuit across CMD+tR+transfer (ablation: wastes link-hours).
-    FCs are pipelined processors (single-gap backfill), busy only while
-    scouting/transferring; §6.3's "all FCs busy" gate is preserved.
-    """
-    tables = make_tables(topo)
-    fc_node = jnp.asarray(topo.fc_node, dtype=jnp.int32)
-    r = np.arange(topo.n_nodes) // topo.cols
-    c = np.arange(topo.n_nodes) % topo.cols
-    dist_np = np.abs(np.arange(topo.rows)[:, None] - r[None, :]) + c[None, :]
-    dist = jnp.asarray(dist_np, dtype=jnp.int32)
-    scout_hop_ticks_num = int(round(cfg.scout_flit_ns))  # ns per hop per direction
-
-    def scout_until_success(links, src, dst, t0, rng, d_hold):
+    def scout_until_success(links3, sp, src, dst, t0, rng, d_hold):
         """Retry the scout at successive link-free events until it reserves.
 
         A link is busy for the scout if it cannot host a ``d_hold``-tick
-        reservation starting now (gap-aware: a link with a large enough idle
-        window before its next commitment still accepts the circuit)."""
+        reservation starting now (gap-aware).  ``k_max`` scouts race per
+        try with independent tie-break streams; scouts beyond the lane's
+        ``n_scouts`` are masked out (their rng is not advanced), so a
+        1-scout lane in a k-scout sweep is bit-identical to a 1-scout
+        program."""
+        n_scouts = fx(sp, "n_scouts")
+        allow = fx(sp, "allow_nonmin")
 
         def try_once(t, rng):
-            # beyond-paper k-scout (paper fn. 3 hints at resend policies):
-            # launch n_scouts with independent tie-break streams and commit
-            # the successful path with the FEWEST hops — shorter circuits
-            # hold fewer link-hours, raising sustainable throughput.
-            busy = _busy_at(links, t, d_hold)
+            busy = _busy_at(links3, t, d_hold)
             best = None
-            for _ in range(n_scouts):
-                rng = (rng * jnp.uint32(747796405)
-                       + jnp.uint32(2891336453)) | jnp.uint32(1)
-                res = scout_route(tables, src, dst, busy, rng, allow_nonminimal)
+            for k in range(k_max):
+                rng_adv = (
+                    rng * jnp.uint32(747796405) + jnp.uint32(2891336453)
+                ) | jnp.uint32(1)
+                active = k < n_scouts  # bool or traced bool
+                rng = jnp.where(active, rng_adv, rng)
+                res = scout_route(stables, src, dst, busy, rng, allow)
                 if best is None:
                     best = res
                 else:
-                    take = res.success & (
+                    take = res.success & active & (
                         (~best.success) | (res.hops < best.hops)
                     )
                     best = jax.tree_util.tree_map(
@@ -472,19 +326,19 @@ def _venice_step(
 
         def cond(carry):
             res, t, rng, tries = carry
-            return (~res.success) & (tries < max_tries)
+            return (~res.success) & (tries < _MAX_TRIES)
 
         def body(carry):
             res, t, rng, tries = carry
             # advance to the next potential link-state change:
             # a free_at passing, or an idle gap opening
-            free, gap_s, _ = links
+            free, gap_s, _ = links3
             ev = jnp.minimum(
                 jnp.min(jnp.where(free > t, free, _BIG)),
                 jnp.min(jnp.where(gap_s > t, gap_s, _BIG)),
             )
             t_next = jnp.maximum(ev, t + 1)
-            t_next = jnp.where(tries + 1 >= max_tries, jnp.max(free), t_next)
+            t_next = jnp.where(tries + 1 >= _MAX_TRIES, jnp.max(free), t_next)
             res, rng = try_once(t_next, rng)
             return res, t_next, rng, tries + 1
 
@@ -493,98 +347,153 @@ def _venice_step(
         )
         return res, t, rng, tries
 
-    def step(state, tx: TxnArrays):
-        plane_free, fcs, links, chips, rng = state
-        tcand = jnp.maximum(tx.arrival, plane_free[tx.plane])
+    def d_est_of(sp, tx, is_read, hold):
+        """Duration estimate for availability checks (FC selection + scout)."""
+        d_est = (xfer_ticks(sp, tx.nbytes, fx(sp, "d_est_hops"))
+                 + fx(sp, "d_est_pad"))
+        if hold is not False:  # hold lanes park the circuit across reads' tR
+            d_est = d_est + jnp.where(
+                jnp.logical_and(hold, is_read), tx.op_ticks, 0
+            )
+        return d_est
+
+    def static_step(sp, state, tx: TxnArrays):
+        # ---- statically-routed lanes: <=2 candidate combined masks over
+        # the unified [links | FCs | chips] resource vector ----
+        plane_free, res = state
         is_read = tx.kind == KIND_READ
-        # duration estimate for availability checks: transfer + scout-RTT margin
-        d_est = _xfer_link(cfg, tx.nbytes, 48) + 16
-        if hold_during_op:
-            d_est = d_est + jnp.where(is_read, tx.op_ticks, 0)
-        fc, t0, any_free = _fc_select(fcs, dist[:, tx.node], tcand, d_est)
-        src = fc_node[fc]
-        min_hops = dist[fc, tx.node]
-        cmd_pkt = _cmd_link(cfg, min_hops)  # read command: scout-sized packet
+        tcand = jnp.maximum(tx.arrival, plane_free[tx.plane])
+        fc_nearest = fx(sp, "fc_nearest")
+        count_bus = fx(sp, "count_bus")
 
-        if hold_during_op:
-            # one circuit across CMD + flash op + transfer (conservative)
-            res, t_resv, rng, tries = scout_until_success(
-                links, src, tx.node, t0, rng, d_est
-            )
-            hops = res.hops
-            rtt = _ceil_div((res.steps + hops) * scout_hop_ticks_num, TICK_NS)
-            start = t_resv + rtt.astype(jnp.int32)
-            cmd = _cmd_link(cfg, hops)
-            xfer = _xfer_link(cfg, tx.nbytes, hops)
-            done_r = start + cmd + tx.op_ticks + xfer
-            data_end_w = start + cmd + xfer
-            circuit_end = jnp.where(is_read, done_r, data_end_w)
-            links = _commit_mask(links, res.path_mask, t_resv, circuit_end, tx.valid)
-            fcs = _commit1(fcs, fc, t_resv, circuit_end, tx.valid)
-            chips = _commit1(chips, tx.node, t_resv, circuit_end, tx.valid)
-            done = jnp.where(is_read, done_r, data_end_w + tx.op_ticks)
-            out = StepOut(
-                completion=done,
-                wait=start - t0,
-                conflict=tries > 1,
-                hops=hops,
-                tries=tries,
-                scout_steps=res.steps,
-                misroutes=res.misroutes,
-                bus_hold=jnp.int32(0),
-                link_hold=hops * (circuit_end - t_resv),
-            )
-            plane_free = plane_free.at[tx.plane].set(
-                jnp.where(tx.valid, done, plane_free[tx.plane])
-            )
-            return (plane_free, fcs, links, chips, rng), out
+        d_est = d_est_of(sp, tx, is_read, fx(sp, "hold"))
+        free, gs, ge = res
+        sl = slice(L0, L0 + F0)
+        avail = _gap_avail(gs[sl], ge[sl], free[sl], tcand, d_est)
+        avail = jnp.where(sp.fc_valid, avail, _BIG)
+        fc_near, t0_near = fc_select(avail, sp.dist[:, tx.node], tcand)
+        t0 = jnp.where(fc_nearest, t0_near, tcand)
 
-        # ---- paper design: reservation per transfer ----
+        fcA = jnp.where(fc_nearest, fc_near, sp.fc_fixed[tx.node, 0])
+        fcB = jnp.where(fc_nearest, fc_near, sp.fc_fixed[tx.node, 1])
+        cand2 = sp.cand2_ok[tx.node]
+        resA, doneA, waitA, occA, hopsA = eval_static_cand(
+            sp, res, tx, is_read, t0, fcA, 0, tx.valid
+        )
+        resB, doneB, waitB, occB, hopsB = eval_static_cand(
+            sp, res, tx, is_read, t0, fcB, 1, tx.valid & cand2
+        )
+        useA = doneA <= jnp.where(cand2, doneB, _BIG)
+        res = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(useA, a, b), resA, resB
+        )
+        done = jnp.where(useA, doneA, doneB)
+        wait = jnp.where(useA, waitA, waitB)
+        occ = jnp.where(useA, occA, occB)
+        hops_o = jnp.where(useA, hopsA, hopsB)
+        plane_free = plane_free.at[tx.plane].set(
+            jnp.where(tx.valid, done, plane_free[tx.plane])
+        )
+        out = StepOut(
+            completion=done,
+            wait=wait,
+            conflict=wait > 0,
+            hops=hops_o,
+            tries=jnp.int32(1),
+            scout_steps=jnp.int32(0),
+            misroutes=jnp.int32(0),
+            bus_hold=jnp.where(count_bus, occ, 0),
+            link_hold=jnp.where(count_bus, 0, hops_o * occ),
+        )
+        return (plane_free, res), out
+
+    def scout_step(sp, state, tx: TxnArrays):
+        # ---- scout-routed lanes (Venice §4): per-transfer circuit over
+        # separate link/FC/chip pools (narrow state keeps the hot scan as
+        # lean as a hand-written Venice step) ----
+        plane_free, links, fcs, chips, rng = state
+        is_read = tx.kind == KIND_READ
+        tcand = jnp.maximum(tx.arrival, plane_free[tx.plane])
+        hold = fx(sp, "hold")
+
+        d_est = d_est_of(sp, tx, is_read, hold)
+        avail = _avail_all(fcs, tcand, d_est)
+        fc, t0 = fc_select(avail, sp.dist[:n_fcs, tx.node], tcand)
+        src = sp.fc_node[fc]
+        min_hops = sp.dist[fc, tx.node]
+        cmd_pkt = cmd_ticks(sp, min_hops)  # read cmd: scout-sized packet
         # reads: command packet now; data-phase scout at tR completion
-        s_cmd, fcs = _sched_gap(fcs, fc, t0, cmd_pkt, tx.valid & is_read)
-        ready_r = s_cmd + cmd_pkt + tx.op_ticks  # data ready in page buffer
-        # the data-phase transfer additionally needs this FC and the chip's
-        # I/O interface to be available (the FC tracks chip status and only
-        # scouts when the transfer can actually start)
+        # (paper mode only — hold mode keeps one circuit for everything)
+        en_cmd = tx.valid & is_read & jnp.logical_not(hold)
+        s_cmd, fcs = _sched_gap(fcs, fc, t0, cmd_pkt, en_cmd)
+        ready_r = s_cmd + cmd_pkt + tx.op_ticks  # data in page buffer
+        # the data transfer additionally needs this FC and the chip's I/O
+        # interface (the FC tracks chip status and only scouts when the
+        # transfer can actually start)
         t_nonread = jnp.maximum(t0, _avail1(chips, tx.node, t0, d_est))
         t_read = jnp.maximum(
             jnp.maximum(ready_r, _avail1(fcs, fc, ready_r, d_est)),
             _avail1(chips, tx.node, ready_r, d_est),
         )
         t_xfer_req = jnp.where(is_read, t_read, t_nonread)
-
-        res, t_resv, rng, tries = scout_until_success(
-            links, src, tx.node, t_xfer_req, rng, d_est
+        t_scout = jnp.where(hold, t0, t_xfer_req)
+        sres, t_resv, rng, tries = scout_until_success(
+            links, sp, src, tx.node, t_scout, rng, d_est
         )
-        hops = res.hops
-        rtt = _ceil_div((res.steps + hops) * scout_hop_ticks_num, TICK_NS)
+        hops_o = sres.hops
+        rtt = _ceil_div((sres.steps + hops_o) * scout_hop_ns, TICK_NS)
         start = t_resv + rtt.astype(jnp.int32)
-        cmd = _cmd_link(cfg, hops)
-        xfer = _xfer_link(cfg, tx.nbytes, hops)
-        # read: backward data transfer; write/erase: forward command+data
-        dur = jnp.where(is_read, xfer, cmd + xfer)
-        end = start + dur
-        links = _commit_mask(links, res.path_mask, t_resv, end, tx.valid)
-        fcs = _commit1(fcs, fc, t_resv, end, tx.valid)
-        chips = _commit1(chips, tx.node, t_resv, end, tx.valid)
-        done = jnp.where(is_read, end, end + tx.op_ticks)
+        cmd_v = cmd_ticks(sp, hops_o)
+        xfer_v = xfer_ticks(sp, tx.nbytes, hops_o)
+        # paper mode: read = backward data; write/erase = fwd cmd+data
+        dur_p = jnp.where(is_read, xfer_v, cmd_v + xfer_v)
+        end_p = start + dur_p
+        done_p = jnp.where(is_read, end_p, end_p + tx.op_ticks)
+        wait_p = (s_cmd - t0) + (start - t_xfer_req)
+        # hold mode: one circuit across CMD + flash op + transfer
+        done_r_h = start + cmd_v + tx.op_ticks + xfer_v
+        data_end_w = start + cmd_v + xfer_v
+        circuit_end = jnp.where(is_read, done_r_h, data_end_w)
+        done_h = jnp.where(is_read, done_r_h, data_end_w + tx.op_ticks)
+        commit_end = jnp.where(hold, circuit_end, end_p)
+        done = jnp.where(hold, done_h, done_p)
+        wait = jnp.where(hold, start - t0, wait_p)
+        links = _commit_mask(links, sres.path_mask, t_resv, commit_end,
+                             tx.valid)
+        fcs = _commit1(fcs, fc, t_resv, commit_end, tx.valid)
+        chips = _commit1(chips, tx.node, t_resv, commit_end, tx.valid)
         plane_free = plane_free.at[tx.plane].set(
             jnp.where(tx.valid, done, plane_free[tx.plane])
         )
         out = StepOut(
             completion=done,
-            wait=(s_cmd - t0) + (start - t_xfer_req),
+            wait=wait,
             conflict=tries > 1,
-            hops=hops,
+            hops=hops_o,
             tries=tries,
-            scout_steps=res.steps,
-            misroutes=res.misroutes,
+            scout_steps=sres.steps,
+            misroutes=sres.misroutes,
             bus_hold=jnp.int32(0),
-            link_hold=hops * (end - t_resv),
+            link_hold=hops_o * (commit_end - t_resv),
         )
-        return (plane_free, fcs, links, chips, rng), out
+        return (plane_free, links, fcs, chips, rng), out
 
-    return step
+    if has_static:
+        def init_state(seed):
+            return (jnp.zeros((n_planes,), jnp.int32), _triple(R_pad))
+
+        return init_state, static_step
+
+    def init_state(seed):
+        return (
+            jnp.zeros((n_planes,), jnp.int32),
+            _triple(L0),
+            _triple(n_fcs),
+            _triple(lay.n_nodes),
+            jnp.asarray(seed, jnp.uint32),
+        )
+
+    return init_state, scout_step
 
 
 # ---------------------------------------------------------------------------
@@ -592,98 +501,136 @@ def _venice_step(
 # ---------------------------------------------------------------------------
 
 
-@functools.lru_cache(maxsize=None)
-def _build_sim(cfg: SSDConfig, design: str, n_pad: int):
-    """Compile one scan program per (config, design, padded length)."""
-    topo = build_mesh(cfg.rows, cfg.cols)
+def _geom_sig(cfg: SSDConfig) -> tuple:
+    """The slice of the config the compiled program actually depends on.
 
-    if design in ("baseline", "pssd"):
-        mult = 2.0 if design == "pssd" else 1.0
-        ovh = 0 if design == "pssd" else cfg.t_bus_ovh  # pSSD is packetized
-        step = _bus_step(
-            cfg, lambda tx: tx.row, lambda tx: _xfer_bus(cfg, tx.nbytes, mult), ovh
-        )
-        n_chan = cfg.rows
-    elif design == "ideal":
-        step = _bus_step(
-            cfg,
-            lambda tx: tx.node,
-            lambda tx: _xfer_bus(cfg, tx.nbytes, 1.0),
-            cfg.t_bus_ovh,
-        )
-        n_chan = topo.n_nodes
-    elif design == "pnssd":
-        step = _pnssd_step(cfg, topo)
-        n_chan = topo.rows + topo.cols
-    elif design == "nossd":
-        step = _nossd_step(cfg, topo)
-        n_chan = 0
-    elif design in ("venice", "venice_minimal", "venice_hold",
-                    "venice_kscout"):
-        step = _venice_step(
-            cfg,
-            topo,
-            allow_nonminimal=design != "venice_minimal",
-            hold_during_op=design == "venice_hold",
-            n_scouts=3 if design == "venice_kscout" else 1,
-        )
-        n_chan = 0
-    else:
-        raise ValueError(f"unknown design {design!r}; one of {DESIGNS}")
+    Latencies, page size and channel rates reach the program as traced data
+    (txn arrays / LaneTables), so perf- and cost-optimized configs of the
+    same geometry share every executable."""
+    return (cfg.rows, cfg.cols, cfg.dies_per_chip, cfg.planes_per_die,
+            int(round(cfg.scout_flit_ns)))
 
-    is_bus = design in ("baseline", "pssd", "pnssd", "ideal")
 
-    def run(txns: TxnArrays, seed):
-        plane_free = jnp.zeros((cfg.n_planes,), jnp.int32)
-        if design == "pnssd":
-            state = (
-                plane_free,
-                _triple(n_chan),
-                _triple(topo.n_nodes),
-                _triple(topo.rows),
-            )
-        elif is_bus:
-            state = (plane_free, _triple(n_chan))
-        elif design == "nossd":
-            state = (
-                plane_free,
-                _triple(topo.n_fcs),
-                _triple(topo.n_links),
-                _triple(topo.n_nodes),
-            )
+def _promotions(tables) -> tuple:
+    """Common value of each _PROMOTABLE scalar across the group's lanes
+    (read from the lowered tables), else None."""
+    out = []
+    for name in _PROMOTABLE:
+        vals = np.asarray(getattr(tables, name))
+        if np.all(vals == vals.flat[0]):
+            out.append(vals.flat[0].item())  # hashable python bool/int
         else:
-            state = (
-                plane_free,
-                _triple(topo.n_fcs),
-                _triple(topo.n_links),
-                _triple(topo.n_nodes),
-                jnp.asarray(seed, jnp.uint32),
-            )
+            out.append(None)
+    return tuple(out)
+
+
+def _skip_out(tx: TxnArrays) -> StepOut:
+    """StepOut emitted for padded (invalid) transactions."""
+    return StepOut(
+        completion=tx.arrival,
+        wait=jnp.int32(0),
+        conflict=jnp.bool_(False),
+        hops=jnp.int32(0),
+        tries=jnp.int32(0),
+        scout_steps=jnp.int32(0),
+        misroutes=jnp.int32(0),
+        bus_hold=jnp.int32(0),
+        link_hold=jnp.int32(0),
+    )
+
+
+_RUN1_CACHE: dict = {}
+
+
+def _build_sweep(cfg: SSDConfig, n_pad: int, n_lanes: int, k_max: int,
+                 has_scout: bool, fixed: tuple, tables):
+    """Resolve the compiled runner for a sweep group.
+
+    Multi-lane groups vmap a design-agnostic program (tables are traced
+    arguments).  1-lane groups — ``simulate`` and the common one-Venice
+    sweep — instead embed the lane's tables as closure constants, which
+    lets XLA specialize the scan about as tightly as a hand-written
+    per-design program; the cache keys on table *content*, so configs
+    lowering to identical tables (e.g. mesh designs under perf- and
+    cost-optimized configs) still share the executable."""
+    sig = _geom_sig(cfg)
+    if n_lanes != 1:
+        run = _build_sweep_cached(sig, n_pad, n_lanes, k_max, has_scout,
+                                  fixed)
+        return run
+    # key on the table bytes themselves (not a hash of them): the dict
+    # equality check makes a collision impossible rather than just unlikely
+    tkey = tuple(np.asarray(a).tobytes() for a in tables)
+    key = (sig, n_pad, k_max, has_scout, fixed, tkey)
+    run = _RUN1_CACHE.get(key)
+    if run is None:
+        run = _compile_run1(sig, n_pad, k_max, has_scout, fixed, tables)
+        _RUN1_CACHE[key] = run
+    return run
+
+
+def _compile_run1(sig, n_pad, k_max, has_scout, fixed, tables):
+    rows, cols, dies, planes_per_die, scout_hop_ns = sig
+    topo = build_mesh(rows, cols)
+    n_planes = rows * cols * dies * planes_per_die
+    lay = sweep_layout_geom(rows, cols)
+    stables = make_tables(topo)
+    init_state, step = _make_step(lay, stables, scout_hop_ns, n_planes,
+                                  k_max, not has_scout, fixed)
+    # the lane's view of the tables, embedded as compile-time constants
+    sp0 = jax.tree_util.tree_map(
+        lambda x: jnp.asarray(np.asarray(x)[0]), tables
+    )
+
+    def run1(tables_unused, seed, txns: TxnArrays):
+        state = init_state(seed[0])
 
         def scan_step(st, tx):
             def real(st):
-                return step(st, tx)
+                return step(sp0, st, tx)
 
             def skip(st):
-                out = StepOut(
-                    completion=tx.arrival,
-                    wait=jnp.int32(0),
-                    conflict=jnp.bool_(False),
-                    hops=jnp.int32(0),
-                    tries=jnp.int32(0),
-                    scout_steps=jnp.int32(0),
-                    misroutes=jnp.int32(0),
-                    bus_hold=jnp.int32(0),
-                    link_hold=jnp.int32(0),
-                )
-                return st, out
+                return st, _skip_out(tx)
+
+            return jax.lax.cond(tx.valid, real, skip, st)
+
+        _, outs = jax.lax.scan(scan_step, state, txns)
+        return jax.tree_util.tree_map(lambda x: x[None], outs)
+
+    return jax.jit(run1)
+
+
+@functools.lru_cache(maxsize=None)
+def _build_sweep_cached(sig: tuple, n_pad: int, n_lanes: int, k_max: int,
+                        has_scout: bool, fixed: tuple):
+    """Compile one vmapped scan program per (geometry, padded length, lane
+    count, cost class).  Design tables are *arguments*, not closure
+    constants, so every design subset of the same lane count reuses the
+    same executable — and so do all configs sharing the geometry."""
+    rows, cols, dies, planes_per_die, scout_hop_ns = sig
+    topo = build_mesh(rows, cols)
+    n_planes = rows * cols * dies * planes_per_die
+    lay = sweep_layout_geom(rows, cols)
+    stables = make_tables(topo)
+    init_state, step = _make_step(lay, stables, scout_hop_ns, n_planes,
+                                  k_max, not has_scout, fixed)
+
+    def lane_run(sp, seed, txns: TxnArrays):
+        state = init_state(seed)
+
+        def scan_step(st, tx):
+            def real(st):
+                return step(sp, st, tx)
+
+            def skip(st):
+                return st, _skip_out(tx)
 
             return jax.lax.cond(tx.valid, real, skip, st)
 
         _, outs = jax.lax.scan(scan_step, state, txns)
         return outs
 
-    return jax.jit(run), topo
+    return jax.jit(jax.vmap(lane_run, in_axes=(0, 0, None)))
 
 
 class SimResult(NamedTuple):
@@ -731,10 +678,13 @@ class SimResult(NamedTuple):
 
 
 def _pad_to(n: int) -> int:
-    """Bucket pad lengths to limit recompiles."""
+    """Bucket pad lengths to limit recompiles.
+
+    Powers of 4: compile cost per program dwarfs the cost of scanning the
+    extra padded (cond-skipped) steps, so fewer/coarser buckets win."""
     size = 1024
     while size < n:
-        size *= 2
+        size *= 4
     return size
 
 
@@ -771,15 +721,9 @@ def _nominal_order(cfg: SSDConfig, txns) -> np.ndarray:
     return np.argsort(nominal, kind="stable")
 
 
-def simulate(cfg: SSDConfig, txns, design: str, seed: int = 0) -> SimResult:
-    """Run one (config, design) simulation over numpy transaction arrays.
-
-    ``txns`` is a dict/namespace with numpy fields: arrival (ticks int), kind,
-    plane, node, row, nbytes (see ``repro.ssd.ftl.decompose_trace``).
-    """
-    n = len(txns["arrival"])
-    n_pad = _pad_to(n)
-    order = _nominal_order(cfg, txns)
+def _pack_txns(cfg: SSDConfig, txns, order: np.ndarray, n_pad: int):
+    """Reorder + pad numpy transaction fields into device TxnArrays."""
+    n = len(order)
 
     def f(name, dtype, fill=0):
         a = np.full((n_pad,), fill, dtype=dtype)
@@ -807,11 +751,13 @@ def simulate(cfg: SSDConfig, txns, design: str, seed: int = 0) -> SimResult:
         op_ticks=jnp.asarray(op_pad),
         valid=jnp.asarray(valid),
     )
+    return arrs, op
 
-    run, topo = _build_sim(cfg, design, n_pad)
-    outs = jax.device_get(run(arrs, np.uint32(seed | 1)))
 
-    completion = outs.completion[:n]
+def _finish_result(cfg: SSDConfig, design: str, lane: int, txns, order,
+                   op: np.ndarray, outs, n: int) -> SimResult:
+    """Numpy post-processing of one lane's scan outputs into a SimResult."""
+    completion = outs.completion[lane, :n]
     arrival = np.asarray(txns["arrival"])[order]
     latency = completion - arrival
     exec_ticks = int(completion.max() - arrival.min()) if n else 0
@@ -829,18 +775,19 @@ def simulate(cfg: SSDConfig, txns, design: str, seed: int = 0) -> SimResult:
 
     pm = cfg.power
     tick_s = TICK_NS * 1e-9
+    kind = np.asarray(txns["kind"])[order].astype(np.int32)
     die_w = np.where(
         kind == KIND_READ,
         pm.die_read_w,
         np.where(kind == KIND_WRITE, pm.die_prog_w, pm.die_erase_w),
     )
     flash_energy = float(np.sum(op.astype(np.float64) * tick_s * die_w))
-    bus_hold = int(outs.bus_hold[:n].astype(np.int64).sum())
-    link_hold = int(outs.link_hold[:n].astype(np.int64).sum())
+    bus_hold = int(outs.bus_hold[lane, :n].astype(np.int64).sum())
+    link_hold = int(outs.link_hold[lane, :n].astype(np.int64).sum())
     transfer_energy = (
         bus_hold * tick_s * pm.bus_active_w + link_hold * tick_s * pm.link_active_w
     )
-    n_routers = topo.n_nodes if design.startswith(("venice", "nossd")) else 0
+    n_routers = REGISTRY[design].n_routers(build_mesh(cfg.rows, cfg.cols))
     static_energy = (pm.static_w + n_routers * pm.router_w) * exec_ticks * tick_s
 
     return SimResult(
@@ -848,11 +795,11 @@ def simulate(cfg: SSDConfig, txns, design: str, seed: int = 0) -> SimResult:
         completion=completion,
         latency=latency,
         req_latency=req_latency,
-        wait=outs.wait[:n],
-        conflict=outs.conflict[:n],
-        hops=outs.hops[:n],
-        tries=outs.tries[:n],
-        misroutes=outs.misroutes[:n],
+        wait=outs.wait[lane, :n],
+        conflict=outs.conflict[lane, :n],
+        hops=outs.hops[lane, :n],
+        tries=outs.tries[lane, :n],
+        misroutes=outs.misroutes[lane, :n],
         exec_ticks=exec_ticks,
         bus_hold_ticks=bus_hold,
         link_hold_ticks=link_hold,
@@ -860,3 +807,73 @@ def simulate(cfg: SSDConfig, txns, design: str, seed: int = 0) -> SimResult:
         transfer_energy_j=float(transfer_energy),
         static_energy_j=float(static_energy),
     )
+
+
+def simulate_sweep(
+    cfg: SSDConfig,
+    txns,
+    designs: Sequence[str] = DESIGNS,
+    seeds: int | Sequence[int] = 0,
+) -> list[SimResult]:
+    """Run the whole design sweep as ONE batched jitted program.
+
+    ``txns`` is a dict/namespace with numpy fields: arrival (ticks int),
+    kind, plane, node, row, nbytes, req (see ``repro.ssd.ftl``).
+    ``designs`` are registry names (a name may repeat, e.g. to sweep seeds
+    for one design); ``seeds`` is one int for every lane or a per-lane
+    sequence.  Returns SimResults in lane order.  Lanes vmap over one
+    compiled executable per (geometry, padded length, cost class, lane
+    count) — the design tables are traced arguments, so the executable is
+    design-agnostic; only structure-gating scalars every lane agrees on
+    (``_PROMOTABLE``) specialize the compile, and they fall back to traced
+    values for heterogeneous sweeps.
+    """
+    designs = tuple(designs)
+    specs = resolve_specs(designs)
+    if isinstance(seeds, (int, np.integer)):
+        seeds = (int(seeds),) * len(designs)
+    seeds = tuple(int(s) for s in seeds)
+    if len(seeds) != len(designs):
+        raise ValueError(
+            f"got {len(seeds)} seeds for {len(designs)} design lanes"
+        )
+
+    n = len(txns["arrival"])
+    n_pad = _pad_to(n)
+    order = _nominal_order(cfg, txns)
+    arrs, op = _pack_txns(cfg, txns, order, n_pad)
+
+    # Partition lanes into the two cost classes.  Batched while-loops make
+    # every lane pay the max iteration count of its batch (and CPU scatters
+    # serialize per lane), so batching cheap statically-routed lanes with
+    # scout lanes would multiply, not amortize, runtime.  Each class is one
+    # design-agnostic executable; within a class, lane costs are homogeneous
+    # and the batch is near-free.
+    results: list[SimResult | None] = [None] * len(designs)
+    for is_scout_group in (False, True):
+        lanes = [
+            i for i, s in enumerate(specs)
+            if (s.kind == "scout") == is_scout_group
+        ]
+        if not lanes:
+            continue
+        names_g = tuple(designs[i] for i in lanes)
+        specs_g = [specs[i] for i in lanes]
+        tables = lower_designs(cfg, names_g)
+        k_max = max(s.n_scouts for s in specs_g)
+        run = _build_sweep(cfg, n_pad, len(lanes), k_max, is_scout_group,
+                           _promotions(tables), tables)
+        seed_arr = jnp.asarray(
+            np.asarray([seeds[i] | 1 for i in lanes], np.uint32)
+        )
+        outs = jax.device_get(run(tables, seed_arr, arrs))
+        for j, i in enumerate(lanes):
+            results[i] = _finish_result(
+                cfg, designs[i], j, txns, order, op, outs, n
+            )
+    return results
+
+
+def simulate(cfg: SSDConfig, txns, design: str, seed: int = 0) -> SimResult:
+    """Run one (config, design) simulation — a 1-lane design sweep."""
+    return simulate_sweep(cfg, txns, (design,), (seed,))[0]

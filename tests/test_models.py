@@ -30,7 +30,20 @@ def _batch_for(cfg, B=2, S=32, seed=0):
     return batch
 
 
-@pytest.mark.parametrize("arch", sorted(ARCHS))
+# Largest smoke configs dominate tier-1 wall-clock; they run in the slow
+# lane (CI main pushes / `pytest -m slow`).  Every arch keeps fast-tier
+# coverage through test_smoke_decode_step.
+_HEAVY_ARCHS = {"llama-3.2-vision-90b", "deepseek-v2-lite-16b", "zamba2-2.7b"}
+
+
+def _arch_params(archs):
+    return [
+        pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY_ARCHS else a
+        for a in archs
+    ]
+
+
+@pytest.mark.parametrize("arch", _arch_params(sorted(ARCHS)))
 def test_smoke_forward_and_train_step(arch):
     cfg = get_smoke(arch)
     params = init_lm(jax.random.PRNGKey(0), cfg)
@@ -73,8 +86,14 @@ def test_smoke_decode_step(arch):
     assert np.isfinite(np.asarray(logits, np.float32)).all()
 
 
-@pytest.mark.parametrize("arch", ["qwen2-0.5b", "gemma2-2b", "granite-3-2b",
-                                  "mamba2-130m"])
+@pytest.mark.parametrize("arch", [
+    "qwen2-0.5b",
+    # decode parity per family is kept fast via qwen2 (attention) and
+    # test_mamba2_decode_matches_full (SSM); the rest run in the slow lane
+    pytest.param("gemma2-2b", marks=pytest.mark.slow),
+    pytest.param("granite-3-2b", marks=pytest.mark.slow),
+    pytest.param("mamba2-130m", marks=pytest.mark.slow),
+])
 def test_decode_matches_full_forward(arch):
     """Greedy decode over a prompt must reproduce the full forward logits."""
     cfg = get_smoke(arch)

@@ -61,50 +61,58 @@ class TestSection31Example:
         assert r.exec_ticks / 100.0 == pytest.approx(7.01, abs=0.03)
 
 
+def _intense_txns(cfg, n, seed=3, wl="src2_1"):
+    tr = gen_trace(wl, n, seed=seed)
+    tr = dict(tr)
+    tr["arrival_us"] = tr["arrival_us"] / 16.0  # intensify
+    pages = to_pages(tr, cfg.page_bytes)
+    return decompose_trace(
+        cfg, pages, footprint_pages=int(pages["footprint_pages"])
+    )
+
+
+@pytest.fixture(scope="module")
+def behaviour_runs():
+    """One full-geometry sweep shared by the behaviour assertions below —
+    per-design ``simulate`` is bit-identical to its sweep lane (enforced by
+    tests/test_designs.py), so asserting on sweep lanes loses nothing."""
+    from repro.ssd import simulate_sweep
+
+    cfg = perf_optimized()
+    txns = _intense_txns(cfg, 250)
+    designs = ("baseline", "nossd", "venice", "venice_hold", "ideal")
+    return dict(zip(designs, simulate_sweep(cfg, txns, designs)))
+
+
 class TestDesignBehaviour:
-    def _quick(self, cfg, design, n=600, seed=3, wl="src2_1"):
-        tr = gen_trace(wl, n, seed=seed)
-        tr = dict(tr)
-        tr["arrival_us"] = tr["arrival_us"] / 16.0  # intensify
-        pages = to_pages(tr, cfg.page_bytes)
-        txns = decompose_trace(cfg, pages, footprint_pages=int(pages["footprint_pages"]))
-        return simulate(cfg, txns, design)
+    def test_venice_reduces_conflicts_vs_baseline(self, behaviour_runs):
+        assert (behaviour_runs["venice"].conflict_rate()
+                < behaviour_runs["baseline"].conflict_rate())
 
-    def test_venice_reduces_conflicts_vs_baseline(self):
-        cfg = perf_optimized()
-        base = self._quick(cfg, "baseline")
-        ven = self._quick(cfg, "venice")
-        assert ven.conflict_rate() < base.conflict_rate()
+    def test_venice_not_slower_than_nossd(self, behaviour_runs):
+        assert (behaviour_runs["venice"].exec_s
+                <= behaviour_runs["nossd"].exec_s * 1.05)
 
-    def test_venice_not_slower_than_nossd(self):
-        cfg = perf_optimized()
-        nossd = self._quick(cfg, "nossd")
-        ven = self._quick(cfg, "venice")
-        assert ven.exec_s <= nossd.exec_s * 1.05
-
-    def test_ideal_is_fastest(self):
-        cfg = perf_optimized()
-        ideal = self._quick(cfg, "ideal")
+    def test_ideal_is_fastest(self, behaviour_runs):
         for d in ["baseline", "venice", "nossd"]:
-            assert ideal.exec_s <= self._quick(cfg, d).exec_s * 1.02
+            assert (behaviour_runs["ideal"].exec_s
+                    <= behaviour_runs[d].exec_s * 1.02)
 
     def test_completion_after_arrival_and_deterministic(self):
         cfg = cost_optimized()
-        r1 = self._quick(cfg, "venice", n=300)
-        r2 = self._quick(cfg, "venice", n=300)
+        txns = _intense_txns(cfg, 200)
+        r1 = simulate(cfg, txns, "venice")
+        r2 = simulate(cfg, txns, "venice")
         assert (r1.latency >= 0).all()
         assert np.array_equal(r1.completion, r2.completion)  # same seed
 
-    def test_venice_hold_wastes_link_hours(self):
+    def test_venice_hold_wastes_link_hours(self, behaviour_runs):
         """Ablation: holding the circuit across tR occupies more link-ticks."""
-        cfg = perf_optimized()
-        ven = self._quick(cfg, "venice")
-        hold = self._quick(cfg, "venice_hold")
-        assert hold.link_hold_ticks > ven.link_hold_ticks
+        assert (behaviour_runs["venice_hold"].link_hold_ticks
+                > behaviour_runs["venice"].link_hold_ticks)
 
-    def test_energy_accounting_consistent(self):
-        cfg = perf_optimized()
-        r = self._quick(cfg, "venice", n=300)
+    def test_energy_accounting_consistent(self, behaviour_runs):
+        r = behaviour_runs["venice"]
         assert r.energy_j == pytest.approx(
             r.flash_energy_j + r.transfer_energy_j + r.static_energy_j
         )
@@ -196,13 +204,24 @@ def test_venice_kscout_shortens_paths():
     """Beyond-paper k-scout: committing the fewest-hop scout of 3 must not
     lengthen average paths, and the sim must stay deterministic."""
     cfg = perf_optimized()
-    tr = gen_trace("src2_1", 500, seed=4)
-    tr = dict(tr)
-    tr["arrival_us"] = tr["arrival_us"] / 16.0
-    pages = to_pages(tr, cfg.page_bytes)
-    txns = decompose_trace(cfg, pages, footprint_pages=int(pages["footprint_pages"]))
+    txns = _intense_txns(cfg, 150, seed=4)
     v1 = simulate(cfg, txns, "venice")
     vk = simulate(cfg, txns, "venice_kscout")
     assert vk.hops[vk.hops > 0].mean() <= v1.hops[v1.hops > 0].mean() + 1e-9
     vk2 = simulate(cfg, txns, "venice_kscout")
     assert np.array_equal(vk.completion, vk2.completion)
+
+
+@pytest.mark.slow
+def test_full_geometry_sweep_parity_slow():
+    """Heavy sweep: all nine registered designs on the full 8x8 geometry in
+    one call, each lane bit-identical to its standalone simulation."""
+    from repro.ssd import DESIGNS, simulate_sweep
+
+    cfg = perf_optimized()
+    txns = _intense_txns(cfg, 600)
+    sweep = simulate_sweep(cfg, txns, DESIGNS, seeds=11)
+    for lane, design in zip(sweep, DESIGNS):
+        solo = simulate(cfg, txns, design, seed=11)
+        assert np.array_equal(lane.completion, solo.completion), design
+        assert np.array_equal(lane.conflict, solo.conflict), design
