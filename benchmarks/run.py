@@ -2,14 +2,19 @@
 
   PYTHONPATH=src python -m benchmarks.run             # quick preset
   PYTHONPATH=src python -m benchmarks.run --full      # all 19+6 workloads
+  PYTHONPATH=src python -m benchmarks.run --smoke     # CI probe: 1 wl x 2 designs
   PYTHONPATH=src python -m benchmarks.run --only fig9 --csv results/
   PYTHONPATH=src python -m benchmarks.run --designs venice,venice_kscout,ideal
   PYTHONPATH=src python -m benchmarks.run --json results/BENCH_quick.json
+  PYTHONPATH=src python -m benchmarks.run --ftl-engine scalar   # FTL A/B
 
 Every sweep phase runs all requested designs through ONE compiled batched
 program (``repro.ssd.sim.simulate_sweep``); ``--json`` records the perf
-trajectory (wall-clock per phase + per-design speedups) as a ``BENCH_*.json``
-artifact so regressions in sweep throughput are visible across commits.
+trajectory as a ``BENCH_*.json`` artifact so regressions are visible across
+commits: per-phase wall-clock is split into ``ftl_s`` (trace → transaction
+decomposition — the array-native engine, or the scalar oracle under
+``--ftl-engine scalar``) and ``sim_s`` (the jitted sweep), plus per-design
+speedups and cache telemetry.
 
 Figures reproduced (as CSV tables; all values also summarized to stdout):
   fig4    prior approaches + ideal vs Baseline (perf-optimized)
@@ -34,13 +39,21 @@ import time
 import numpy as np
 
 from repro.ssd import DESIGNS as ALL_DESIGNS
-from repro.ssd import cost_optimized, perf_optimized
+from repro.ssd import bench, cost_optimized, perf_optimized
 from repro.ssd.bench import geomean, run_workload
 from repro.traces import MIXES, WORKLOADS
 
 QUICK_WL = ["proj_3", "src2_1", "hm_0", "prxy_0", "YCSB_B", "ssd-10", "usr_0"]
 DEFAULT_DESIGNS = ("baseline", "pssd", "pnssd", "nossd", "venice", "ideal")
 N_REQ_QUICK = 2500
+# CI probe: the smallest run that still exercises the whole pipeline —
+# trace gen -> FTL -> both cost classes (bus-routed baseline + scout-routed
+# venice) -> metrics/CSV/JSON.  Keeps the fast lane failing on pipeline
+# regressions without paying for a full sweep.
+SMOKE_WL = ["hm_0"]
+SMOKE_DESIGNS = ("baseline", "venice")
+N_REQ_SMOKE = 240
+SMOKE_PHASES = ("fig4_9_10_13", "tab4", "sec31")
 
 
 def _rows_to_csv(path, header, rows):
@@ -232,6 +245,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="all 19 workloads + 6 mixes (slow)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI probe: 1 workload x 2 designs, core phases only")
     ap.add_argument("--only", default=None,
                     help="fig4|fig9|fig11|fig12|fig14|fig15|tab4|sec31")
     ap.add_argument("--csv", default="results")
@@ -239,45 +254,71 @@ def main() -> None:
     ap.add_argument("--designs", default=None, metavar="D1,D2,...",
                     help="design lanes to sweep (default: the paper's six; "
                          "'all' = every registered design incl. ablations)")
+    ap.add_argument("--ftl-engine", default="auto",
+                    choices=("auto", "vector", "scalar"),
+                    help="trace-decomposition engine (scalar = the "
+                         "page-at-a-time oracle, for FTL-pipeline A/Bs)")
     ap.add_argument("--json", nargs="?", const="", default=None,
                     metavar="PATH",
                     help="write a BENCH_*.json perf-trajectory artifact "
-                         "(wall-clock per phase + per-design speedups)")
+                         "(ftl_s/sim_s per phase + per-design speedups)")
     args = ap.parse_args()
+    if args.smoke and args.full:
+        raise SystemExit("--smoke and --full are mutually exclusive")
 
-    designs = _parse_designs(args.designs)
-    workloads = sorted(WORKLOADS) if args.full else QUICK_WL
-    n_req = args.n_req or (None if args.full else N_REQ_QUICK)
-    mixes = None if args.full else ["mix1", "mix5"]
+    bench.FTL_ENGINE = args.ftl_engine
+    if args.smoke:
+        designs = _parse_designs(args.designs or ",".join(SMOKE_DESIGNS))
+        workloads = SMOKE_WL
+        n_req = args.n_req or N_REQ_SMOKE
+        mixes = ["mix1"]
+    else:
+        designs = _parse_designs(args.designs)
+        workloads = sorted(WORKLOADS) if args.full else QUICK_WL
+        n_req = args.n_req or (None if args.full else N_REQ_QUICK)
+        mixes = None if args.full else ["mix1", "mix5"]
     t0 = time.time()
-    phases: dict[str, float] = {}
+    phases: dict[str, dict] = {}
     speedups = {}
 
     def phase(name, fn, *a, **kw):
         t = time.time()
+        f0, s0 = bench.PERF["ftl_s"], bench.PERF["sim_s"]
         out = fn(*a, **kw)
-        phases[name] = round(time.time() - t, 2)
+        phases[name] = {
+            "s": round(time.time() - t, 2),
+            "ftl_s": round(bench.PERF["ftl_s"] - f0, 3),
+            "sim_s": round(bench.PERF["sim_s"] - s0, 3),
+        }
         return out
 
-    run_all = args.only is None
-    if run_all or args.only in ("fig4", "fig9", "fig10", "fig13"):
+    def want(name):
+        if args.only is not None:  # explicit --only wins, also under --smoke
+            return args.only in ALIASES.get(name, (name,))
+        return not args.smoke or name in SMOKE_PHASES
+
+    ALIASES = {"fig4_9_10_13": ("fig4", "fig9", "fig10", "fig13")}
+    if want("fig4_9_10_13"):
         speedups = phase("fig4_9_10_13", fig4_and_9_and_10_and_13,
                          workloads, n_req, args.csv, designs)
-    if run_all or args.only == "fig11":
+    if want("fig11"):
         phase("fig11", fig11_tail_latency, n_req, args.csv, designs)
-    if run_all or args.only == "fig12":
+    if want("fig12"):
         phase("fig12", fig12_mixes, n_req, args.csv, designs, mixes)
-    if run_all or args.only == "fig14":
+    if want("fig14"):
         phase("fig14", fig14_power_energy, workloads[:4], n_req, args.csv,
               designs)
-    if run_all or args.only == "fig15":
+    if want("fig15"):
         phase("fig15", fig15_sensitivity, n_req, args.csv, designs)
-    if run_all or args.only == "tab4":
+    if want("tab4"):
         phase("tab4", tab4_overheads, args.csv)
-    if run_all or args.only == "sec31":
+    if want("sec31"):
         phase("sec31", sec31_example, args.csv)
     total = round(time.time() - t0, 2)
-    print(f"[benchmarks] total {total}s; CSVs in {args.csv}/")
+    ftl_total = round(bench.PERF["ftl_s"], 3)
+    sim_total = round(bench.PERF["sim_s"], 3)
+    print(f"[benchmarks] total {total}s (ftl {ftl_total}s, sim {sim_total}s, "
+          f"engine={args.ftl_engine}); CSVs in {args.csv}/")
 
     if args.json is not None:
         path = args.json or os.path.join(
@@ -285,12 +326,19 @@ def main() -> None:
         )
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         artifact = {
-            "preset": "full" if args.full else "quick",
+            "preset": ("smoke" if args.smoke
+                       else "full" if args.full else "quick"),
             "only": args.only,
             "n_req": n_req,
             "designs": list(designs),
             "workloads": workloads,
-            "phases_s": phases,
+            "ftl_engine": args.ftl_engine,
+            "phases": phases,
+            "ftl_s_total": ftl_total,
+            "sim_s_total": sim_total,
+            "cache": {k: bench.PERF[k] for k in
+                      ("decomp_hits", "decomp_misses", "run_hits",
+                       "run_subset_hits", "run_misses")},
             "total_s": total,
             "speedups_geomean": {
                 cfg: {d: round(v, 4) for d, v in per.items()}

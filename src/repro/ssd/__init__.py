@@ -12,10 +12,11 @@ from repro.ssd.config import (
 from repro.ssd.designs import DesignSpec, LaneTables, REGISTRY, lower_designs
 from repro.ssd.sim import DESIGNS, SimResult, simulate, simulate_sweep
 from repro.ssd.ftl import FTL, Transactions, decompose_trace
+from repro.ssd.ftl_engine import decompose_vectorized
 
 __all__ = [
     "SSDConfig", "PowerModel", "cost_optimized", "perf_optimized", "TICK_NS",
     "DESIGNS", "DesignSpec", "LaneTables", "REGISTRY", "lower_designs",
     "SimResult", "simulate", "simulate_sweep", "FTL", "Transactions",
-    "decompose_trace",
+    "decompose_trace", "decompose_vectorized",
 ]

@@ -2,6 +2,14 @@
 wear-leveling — and the decomposition of host I/O requests into the page-level
 transactions consumed by the simulator.
 
+This module is the **scalar oracle**: one page per Python iteration, written
+for obviousness, it defines the FTL's semantics.  The production path is the
+array-native engine in ``repro.ssd.ftl_engine`` (``decompose_trace``'s
+default for preconditioned traces), which is bit-identical by construction
+and by test (``tests/test_ftl.py``); this module stays the parity reference
+and still owns GC/victim selection, which the engine calls into at trigger
+points.
+
 The FTL runs *ahead of* the timing simulation (numpy, sequential): physical
 placement uses static channel-first striping (CWDP order), which is standard
 practice and — per the paper §7 — no allocation policy can lay data out to
@@ -27,6 +35,32 @@ KIND_READ, KIND_WRITE, KIND_ERASE = 0, 1, 2
 
 class Transactions(dict):
     """dict of numpy arrays: arrival(ticks), kind, plane, node, row, nbytes, req."""
+
+
+def stripe_plane(cfg: SSDConfig, idx):
+    """Chunked W-C-D-P striping: plane for allocation index ``idx``.
+
+    Works elementwise on ints and numpy arrays — the single source of
+    truth for both the scalar FTL and the array-native engine.
+    Consecutive allocations fill one plane for ``cfg.chunk_pages`` pages
+    (superpage allocation), then stripe *way (chip) first within the
+    channel*, then across channels.  Die-first fill is the standard
+    write-path layout — it pipelines a sequential write's bus transfers on
+    one channel while neighbours' tPROGs overlap.  The flip side (the
+    paper's motivation): sequentially-written / hot data ranges end up on
+    many chips of ONE channel, so reading them back serializes on that
+    channel in the shared-bus baseline while a path-diverse interconnect
+    can reach all its chips concurrently."""
+    idx = idx // max(1, cfg.chunk_pages)
+    way = idx % cfg.cols
+    idx = idx // cfg.cols
+    ch = idx % cfg.rows
+    idx = idx // cfg.rows
+    die = idx % cfg.dies_per_chip
+    idx = idx // cfg.dies_per_chip
+    pl = idx % cfg.planes_per_die
+    chip = ch * cfg.cols + way
+    return (chip * cfg.dies_per_chip + die) * cfg.planes_per_die + pl
 
 
 @dataclasses.dataclass
@@ -61,6 +95,12 @@ class FTL:
         self._stripe = 0  # global plane round-robin pointer
         self.gc_events = 0
         self.gc_page_moves = 0
+        # read-before-write preconditioning (DESIGN.md §3): pages mapped on
+        # demand by reads, and the GC transactions that mapping triggered —
+        # those transactions are *dropped* from the stream (the read is
+        # served as if the page were already resident), so we count them.
+        self.read_precond_pages = 0
+        self.read_precond_gc_txns = 0
 
     # --- geometry helpers -------------------------------------------------
     def plane_of_ppn(self, ppn: int) -> int:
@@ -159,26 +199,8 @@ class FTL:
             out.append((t, KIND_ERASE, plane, 0, -1))
 
     def _stripe_plane(self, idx: int) -> int:
-        """Chunked W-C-D-P striping: consecutive allocations fill one plane for
-        ``cfg.chunk_pages`` pages (superpage allocation), then stripe *way
-        (chip) first within the channel*, then across channels.  Die-first
-        fill is the standard write-path layout — it pipelines a sequential
-        write's bus transfers on one channel while neighbours' tPROGs overlap.
-        The flip side (the paper's motivation): sequentially-written / hot
-        data ranges end up on many chips of ONE channel, so reading them back
-        serializes on that channel in the shared-bus baseline while a
-        path-diverse interconnect can reach all its chips concurrently."""
-        cfg = self.cfg
-        idx //= max(1, cfg.chunk_pages)
-        way = idx % cfg.cols
-        idx //= cfg.cols
-        ch = idx % cfg.rows
-        idx //= cfg.rows
-        die = idx % cfg.dies_per_chip
-        idx //= cfg.dies_per_chip
-        pl = idx % cfg.planes_per_die
-        chip = ch * cfg.cols + way
-        return (chip * cfg.dies_per_chip + die) * cfg.planes_per_die + pl
+        """Chunked W-C-D-P striping (see module-level ``stripe_plane``)."""
+        return int(stripe_plane(self.cfg, idx))
 
     # --- host ops ----------------------------------------------------------
     def write_page(self, lpn: int, out: list | None, t: int) -> int:
@@ -200,8 +222,47 @@ class FTL:
     def read_page(self, lpn: int) -> int:
         ppn = self.l2p[lpn]
         if ppn < 0:  # read-before-write: precondition instantly
-            ppn = self.write_page(lpn, None, 0)
+            # The mapping write (and any GC it triggers) mutates FTL state
+            # but emits no transactions — the read is modeled as hitting
+            # already-resident data.  Count the dropped work (DESIGN.md §3).
+            dropped: list = []
+            self.read_precond_pages += 1
+            ppn = self.write_page(lpn, dropped, 0)
+            self.read_precond_gc_txns += len(dropped)
         return int(ppn)
+
+
+def to_transactions(
+    cfg: SSDConfig, arr: np.ndarray, ftl: FTL, n_requests: int
+) -> Transactions:
+    """Insertion-ordered (tick, kind, plane, nbytes, req) rows → Transactions.
+
+    Shared tail of both decomposition engines: the *stable* sort by arrival
+    tick is what makes "same rows in the same insertion order" imply
+    bit-identical output arrays.
+    """
+    if arr.size == 0:
+        arr = np.zeros((0, 5), dtype=np.int64)
+    order = np.argsort(arr[:, 0], kind="stable")
+    arr = arr[order]
+    plane = arr[:, 2]
+    chip = plane // (cfg.dies_per_chip * cfg.planes_per_die)
+    txns = Transactions(
+        arrival=arr[:, 0].astype(np.int32),
+        kind=arr[:, 1].astype(np.int32),
+        plane=plane.astype(np.int32),
+        node=chip.astype(np.int32),
+        row=(chip // cfg.cols).astype(np.int32),
+        nbytes=arr[:, 3].astype(np.int32),
+        req=arr[:, 4].astype(np.int32),
+    )
+    txns.ftl = ftl  # expose for tests / stats
+    txns.n_requests = n_requests
+    # read-before-write preconditioning work (dropped from the stream but
+    # counted — DESIGN.md §3); zero whenever ``precondition=True``
+    txns.read_precond_pages = ftl.read_precond_pages
+    txns.read_precond_gc_txns = ftl.read_precond_gc_txns
+    return txns
 
 
 def decompose_trace(
@@ -211,12 +272,37 @@ def decompose_trace(
     overprovision: float = 1.28,
     precondition: bool = True,
     seed: int = 0,
+    engine: str = "auto",
 ) -> Transactions:
     """Host trace → page-level transaction arrays for ``repro.ssd.sim``.
 
     ``trace``: arrival_us (f64), is_read (bool), offset_page (int64, in cfg
     pages), n_pages (int).  Offsets are taken modulo ``footprint_pages``.
+
+    ``engine``: ``"vector"`` runs the array-native engine
+    (``repro.ssd.ftl_engine``, bit-identical by construction and by test),
+    ``"scalar"`` forces this module's page-at-a-time oracle, ``"auto"``
+    picks vector whenever it applies (preconditioned traces — the vector
+    read path is a pure L2P gather, which requires every read to hit a
+    mapped page).
     """
+    if engine not in ("auto", "vector", "scalar"):
+        raise ValueError(f"unknown FTL engine {engine!r}")
+    if engine == "vector" and not precondition:
+        raise ValueError(
+            "vector FTL engine requires precondition=True "
+            "(reads lower to pure L2P gathers)"
+        )
+    if engine != "scalar" and precondition:
+        from repro.ssd.ftl_engine import decompose_vectorized
+
+        return decompose_vectorized(
+            cfg,
+            trace,
+            footprint_pages,
+            overprovision=overprovision,
+            seed=seed,
+        )
     ftl = FTL(cfg, n_lpns=footprint_pages, overprovision=overprovision)
     if precondition:
         # map the whole footprint so reads always hit a valid physical page.
@@ -252,21 +338,4 @@ def decompose_trace(
                     rows.append((tg, kind, pl, nb, -1))
 
     arr = np.asarray(rows, dtype=np.int64)
-    if arr.size == 0:
-        arr = np.zeros((0, 5), dtype=np.int64)
-    order = np.argsort(arr[:, 0], kind="stable")
-    arr = arr[order]
-    plane = arr[:, 2]
-    chip = plane // (cfg.dies_per_chip * cfg.planes_per_die)
-    txns = Transactions(
-        arrival=arr[:, 0].astype(np.int32),
-        kind=arr[:, 1].astype(np.int32),
-        plane=plane.astype(np.int32),
-        node=chip.astype(np.int32),
-        row=(chip // cfg.cols).astype(np.int32),
-        nbytes=arr[:, 3].astype(np.int32),
-        req=arr[:, 4].astype(np.int32),
-    )
-    txns.ftl = ftl  # expose for tests / stats
-    txns.n_requests = int(len(arrival))
-    return txns
+    return to_transactions(cfg, arr, ftl, int(len(arrival)))

@@ -53,6 +53,54 @@ MIXES: Dict[str, tuple] = {
 _ALIGN = 4096  # requests are 4KB-aligned multiples (block-device granularity)
 
 
+def _seq_stream_offsets(
+    off: np.ndarray,
+    sz_align: np.ndarray,
+    is_seq: np.ndarray,
+    stream_of: np.ndarray,
+    n_align: int,
+) -> np.ndarray:
+    """Resolve sequential-stream addresses without a per-request loop.
+
+    Semantics (the former scalar loop): every request advances its stream's
+    cursor to ``offset + size``; a sequential request first *reads* the
+    cursor (mod ``n_align``) as its offset, a random request resets the
+    cursor to its own random offset.  Because ``(x % n + s) % n == (x + s)
+    % n``, a run of sequential requests between two resets is a prefix sum:
+    ``offset_k = (base + sum of sizes of earlier seq requests in the run)
+    % n_align`` where ``base`` is the cursor left by the last reset (0 at
+    stream start).  That turns the whole recurrence into one grouped
+    cumulative sum over (stream, arrival-order) — pinned bit-exactly to the
+    scalar loop by ``tests/test_traces.py``.
+    """
+    n = len(off)
+    if n == 0 or not is_seq.any():
+        return off
+    order = np.argsort(stream_of, kind="stable")  # stream-major, arrival order
+    s_s = stream_of[order]
+    seq_s = is_seq[order]
+    off_s = off[order].copy()
+    sz_s = sz_align[order]
+    # exclusive prefix sum of seq sizes (within the stream-major layout)
+    excl = np.concatenate(([0], np.cumsum(np.where(seq_s, sz_s, 0))))[:-1]
+    idx = np.arange(n, dtype=np.int64)
+    # latest reset (= non-seq request) at or before each position …
+    reset_at = np.maximum.accumulate(np.where(~seq_s, idx, -1))
+    # … clipped to the current stream: positions before the stream's first
+    # request belong to another stream ⇒ base cursor 0
+    starts = np.concatenate(([0], np.flatnonzero(s_s[1:] != s_s[:-1]) + 1))
+    counts = np.diff(np.concatenate((starts, [n])))
+    start_of = np.repeat(starts, counts)
+    in_stream = reset_at >= start_of
+    r = np.clip(reset_at, 0, None)
+    base = np.where(in_stream, off_s[r] + sz_s[r], 0)
+    run_sum = excl - np.where(in_stream, excl[r], excl[start_of])
+    off_s[seq_s] = (base + run_sum)[seq_s] % n_align
+    out = off.copy()
+    out[order] = off_s
+    return out
+
+
 def gen_trace(
     name: str,
     n_requests: int,
@@ -121,11 +169,7 @@ def gen_trace(
     sz_align = (size // _ALIGN).astype(np.int64)
     is_seq = (rs.rand(n_requests) < seq_frac) & ~hot
     stream_of = rs.randint(0, n_streams, n_requests)
-    streams = np.zeros((n_streams,), dtype=np.int64)
-    for i in range(n_requests):
-        if is_seq[i]:
-            off[i] = streams[stream_of[i]] % n_align
-        streams[stream_of[i]] = off[i] + sz_align[i]
+    off = _seq_stream_offsets(off, sz_align, is_seq, stream_of, n_align)
 
     return {
         "name": name,

@@ -1,0 +1,94 @@
+"""WorkloadRun / decomposition cache semantics (no simulation needed).
+
+The subset-serving path of ``run_workload`` returns before any trace
+generation or simulation, so these tests drive the caches with synthetic
+entries and assert the LRU contract: hits refresh recency, subset hits are
+derived views that never insert duplicate entries, and eviction drops the
+least-recently-used run.
+"""
+import numpy as np
+import pytest
+
+from repro.ssd import bench, perf_optimized
+from repro.ssd.bench import WorkloadRun, _lru_get, _lru_put, run_workload
+
+
+@pytest.fixture(autouse=True)
+def _clean_caches():
+    bench.clear_caches()
+    yield
+    bench.clear_caches()
+
+
+def _fake_run(cfg, designs):
+    return WorkloadRun(name="wl", cfg=cfg, accel=1.0, n_requests=7,
+                       results={d: object() for d in designs})
+
+
+def _seed_entry(cfg, designs, n_req=100):
+    key = ("wl", cfg, tuple(designs), n_req, 1.5, 0)
+    bench._RUN_CACHE[key] = _fake_run(cfg, designs)
+    return key
+
+
+def test_lru_hit_moves_to_end():
+    cache = {}
+    _lru_put(cache, "a", 1, cap=3)
+    _lru_put(cache, "b", 2, cap=3)
+    _lru_put(cache, "c", 3, cap=3)
+    assert _lru_get(cache, "a") == 1  # refresh "a"
+    _lru_put(cache, "d", 4, cap=3)  # evicts LRU = "b", not "a"
+    assert list(cache) == ["c", "a", "d"]
+
+
+def test_direct_hit_refreshes_recency():
+    cfg = perf_optimized()
+    k1 = _seed_entry(cfg, ("baseline", "venice"))
+    k2 = _seed_entry(cfg, ("baseline", "nossd"), n_req=200)
+    run_workload("wl", cfg, designs=("baseline", "venice"), n_requests=100)
+    assert list(bench._RUN_CACHE) == [k2, k1]  # k1 moved to MRU position
+
+
+def test_subset_hit_is_derived_view_not_a_new_entry():
+    cfg = perf_optimized()
+    designs = ("baseline", "pssd", "venice", "ideal")
+    key = _seed_entry(cfg, designs)
+    sup = bench._RUN_CACHE[key]
+    before = list(bench._RUN_CACHE)
+    sub = run_workload("wl", cfg, designs=("baseline", "venice"),
+                       n_requests=100)
+    # served from the superset: same result objects, no simulation
+    assert sub.results["venice"] is sup.results["venice"]
+    assert set(sub.results) == {"baseline", "venice"}
+    # and the cache holds exactly the entries it held before — the old
+    # behaviour inserted a derived duplicate that evicted the oldest run
+    assert list(bench._RUN_CACHE) == before
+    assert bench.PERF["run_subset_hits"] >= 1
+
+
+def test_subset_hits_do_not_evict_unrelated_runs():
+    cfg = perf_optimized()
+    keys = [_seed_entry(cfg, ("baseline", "venice", f"d{i}"), n_req=i)
+            for i in range(bench._RUN_CACHE_MAX)]  # cache exactly full
+    for _ in range(10):  # repeated subset hits must not push anything out
+        run_workload("wl", cfg, designs=("baseline", "venice"), n_requests=3)
+    assert set(bench._RUN_CACHE) == set(keys)
+
+
+def test_decomp_cache_keyed_on_ftl_geometry_only():
+    """Configs differing only in timing/interconnect share decompositions;
+    geometry changes (page size) do not."""
+    cfg_a = perf_optimized()
+    cfg_b = perf_optimized(t_read_us=99.0, chan_gbps=2.4,
+                           bus_protocol_ovh_ns=0.0)
+    cfg_c = perf_optimized(page_bytes=16384)
+    assert bench.ftl_geometry(cfg_a) == bench.ftl_geometry(cfg_b)
+    assert bench.ftl_geometry(cfg_a) != bench.ftl_geometry(cfg_c)
+    from repro.traces.generator import gen_trace, to_pages
+
+    pages = to_pages(gen_trace("hm_0", 40, seed=1), cfg_a.page_bytes)
+    fp = int(pages["footprint_pages"])
+    t1 = bench.decompose_cached(cfg_a, pages, fp)
+    t2 = bench.decompose_cached(cfg_b, pages, fp)
+    assert t1 is t2  # shared entry
+    assert bench.PERF["decomp_hits"] >= 1

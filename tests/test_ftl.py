@@ -1,0 +1,205 @@
+"""FTL invariants and array-native engine parity.
+
+Two layers of guarantees:
+
+* **Invariants** of the scalar FTL (the oracle): L2P/P2L stay mutually
+  inverse, per-block valid-page accounting conserves live LPNs across GC,
+  erase counts only grow, and wrap-around overwrite pressure drives GC
+  without violating the free-block headroom guard.
+* **Parity**: the vectorized engine (``repro.ssd.ftl_engine``) must be
+  bit-identical to the scalar oracle — every Transactions array and every
+  piece of FTL state — on every workload fixture, including GC-heavy
+  geometries where the engine's epochs are interrupted by scalar GC.
+"""
+import numpy as np
+import pytest
+
+from repro.ssd import cost_optimized, perf_optimized
+from repro.ssd.ftl import FTL, decompose_trace
+from repro.ssd.ftl_engine import _precondition_vectorized
+from repro.traces.generator import gen_trace, to_pages
+
+FTL_STATE = (
+    "l2p", "p2l", "valid", "written", "erase_count", "is_free",
+    "open_block", "next_page",
+)
+FTL_SCALARS = ("_stripe", "gc_events", "gc_page_moves",
+               "read_precond_pages", "read_precond_gc_txns")
+
+
+def _decompose_both(cfg, trace, overprovision=1.28):
+    pages = to_pages(trace, cfg.page_bytes)
+    fp = int(pages["footprint_pages"])
+    a = decompose_trace(cfg, pages, footprint_pages=fp, engine="scalar",
+                        overprovision=overprovision)
+    b = decompose_trace(cfg, pages, footprint_pages=fp, engine="vector",
+                        overprovision=overprovision)
+    return a, b
+
+
+def _assert_bit_identical(a, b):
+    assert set(a) == set(b)
+    for k in a:
+        assert np.array_equal(a[k], b[k]), f"Transactions[{k}] diverges"
+    for attr in FTL_STATE:
+        assert np.array_equal(getattr(a.ftl, attr), getattr(b.ftl, attr)), attr
+    for attr in FTL_SCALARS:
+        assert getattr(a.ftl, attr) == getattr(b.ftl, attr), attr
+    assert a.n_requests == b.n_requests
+
+
+class TestVectorEngineParity:
+    """The acceptance bar: vector output is bit-identical to the oracle."""
+
+    @pytest.mark.parametrize("wl", ["hm_0", "src2_1", "prxy_0", "usr_0"])
+    def test_full_geometry_workloads(self, wl):
+        cfg = perf_optimized()
+        a, b = _decompose_both(cfg, gen_trace(wl, 200, seed=2))
+        _assert_bit_identical(a, b)
+
+    @pytest.mark.parametrize("wl", ["hm_0", "mds_0"])
+    def test_cost_config(self, wl):
+        cfg = cost_optimized()
+        a, b = _decompose_both(cfg, gen_trace(wl, 200, seed=2))
+        _assert_bit_identical(a, b)
+
+    def test_tiny_geometry(self, tiny_cfg):
+        tr = dict(gen_trace("src2_1", 60, seed=3))
+        tr["arrival_us"] = tr["arrival_us"] / 16.0
+        a, b = _decompose_both(tiny_cfg, tr)
+        _assert_bit_identical(a, b)
+
+    def test_gc_heavy_epochs(self):
+        """Hundreds of GC triggers — every epoch boundary must line up."""
+        cfg = perf_optimized(rows=2, cols=2, pages_per_block=16)
+        tr = gen_trace("prxy_0", 2500, seed=5, footprint_bytes=1 << 20)
+        a, b = _decompose_both(cfg, tr, overprovision=3.0)
+        assert a.ftl.gc_events > 100  # the fixture really exercises GC
+        _assert_bit_identical(a, b)
+
+    def test_precondition_fallback_parity(self):
+        """A fill dense enough to GC mid-precondition falls back to the
+        scalar loop; a read-only trace then survives identically."""
+        cfg = perf_optimized(rows=2, cols=2, pages_per_block=8)
+        fp = 256
+        assert not _precondition_vectorized(
+            FTL(cfg, n_lpns=fp, overprovision=1.2)
+        )
+        rs = np.random.RandomState(0)
+        tr = {
+            "arrival_us": np.cumsum(rs.exponential(50.0, 300)),
+            "is_read": np.ones(300, bool),
+            "offset_page": rs.randint(0, fp, 300).astype(np.int64),
+            "n_pages": rs.randint(1, 5, 300).astype(np.int64),
+        }
+        a = decompose_trace(cfg, tr, footprint_pages=fp, engine="scalar",
+                            overprovision=1.2)
+        b = decompose_trace(cfg, tr, footprint_pages=fp, engine="vector",
+                            overprovision=1.2)
+        _assert_bit_identical(a, b)
+        assert a.ftl.gc_events > 0  # the fill itself collected
+
+    def test_engine_guards(self):
+        cfg = perf_optimized(rows=2, cols=2)
+        tr = gen_trace("hm_0", 20, seed=0)
+        pages = to_pages(tr, cfg.page_bytes)
+        with pytest.raises(ValueError):
+            decompose_trace(cfg, pages, footprint_pages=64, engine="warp")
+        with pytest.raises(ValueError):
+            decompose_trace(cfg, pages, footprint_pages=64, engine="vector",
+                            precondition=False)
+
+
+class TestInvariants:
+    """Oracle-level FTL invariants on tiny fixtures."""
+
+    def _churn(self, ftl, n_writes, n_lpns, seed=0):
+        rs = np.random.RandomState(seed)
+        for lpn in rs.randint(0, n_lpns, n_writes):
+            ftl.write_page(int(lpn), [], 0)
+
+    def test_l2p_p2l_mutually_inverse(self):
+        cfg = perf_optimized(rows=2, cols=2, pages_per_block=16)
+        ftl = FTL(cfg, n_lpns=512, overprovision=2.5)
+        self._churn(ftl, 4000, 512, seed=1)
+        mapped = np.flatnonzero(ftl.l2p >= 0)
+        assert np.array_equal(ftl.p2l[ftl.l2p[mapped]], mapped)
+        live = np.flatnonzero(ftl.p2l >= 0)
+        assert np.array_equal(ftl.l2p[ftl.p2l[live]], live)
+        assert len(mapped) == len(live)
+
+    def test_valid_accounting_conserves_live_lpns_across_gc(self):
+        cfg = perf_optimized(rows=2, cols=2, pages_per_block=16)
+        ftl = FTL(cfg, n_lpns=512, overprovision=2.5)
+        for lpn in range(512):  # full precondition: every LPN live
+            ftl.write_page(lpn, [], 0)
+        self._churn(ftl, 6000, 512, seed=2)
+        assert ftl.gc_events > 0
+        # GC moved pages but never lost one: all 512 LPNs still live, and
+        # the per-block valid counters sum to exactly the live population
+        assert (ftl.l2p >= 0).all()
+        assert int(ftl.valid.sum()) == 512
+        # per-block valid equals the P2L census of that block
+        P, B, ppb = ftl.n_planes, ftl.blocks_per_plane, ftl.pages_per_block
+        census = (ftl.p2l.reshape(P, B, ppb) >= 0).sum(axis=2)
+        assert np.array_equal(census, ftl.valid)
+
+    def test_erase_counts_only_grow(self):
+        cfg = perf_optimized(rows=2, cols=2, pages_per_block=16)
+        ftl = FTL(cfg, n_lpns=256, overprovision=3.0)
+        prev = ftl.erase_count.copy()
+        rs = np.random.RandomState(3)
+        for batch in range(12):
+            for lpn in rs.randint(0, 256, 800):
+                ftl.write_page(int(lpn), [], 0)
+            assert (ftl.erase_count >= prev).all()
+            prev = ftl.erase_count.copy()
+        assert int(prev.sum()) > 0
+
+    def test_wraparound_pressure_respects_headroom_guard(self):
+        """Sequential wrap-around overwrites (the worst case for a striped
+        FTL) must drive GC yet never leave a plane without the reserved
+        headroom GC's copyback draws from."""
+        cfg = perf_optimized(rows=2, cols=2, pages_per_block=16)
+        ftl = FTL(cfg, n_lpns=384, overprovision=3.0)
+        for i in range(6 * 384):  # six full footprint wraps
+            ftl.write_page(i % 384, [], 0)
+            if i % 97 == 0:
+                assert (ftl.is_free.sum(axis=1) >= 1).all()
+        assert ftl.gc_events > 0
+        assert ftl.gc_page_moves >= 0
+        assert (ftl.is_free.sum(axis=1) >= 1).all()
+
+    def test_read_before_write_precondition_gc_is_counted(self):
+        """Satellite: reads of unmapped LPNs precondition on demand; the GC
+        work that triggers is dropped from the stream but must be counted
+        and surfaced on Transactions (DESIGN.md §3)."""
+        cfg = perf_optimized(rows=2, cols=2, pages_per_block=16)
+        fp = 512
+        rs = np.random.RandomState(7)
+        n = 1500
+        is_read = rs.rand(n) < 0.3
+        # writes churn a hot 64-page range (invalidating pages so GC can
+        # reclaim); reads roam the whole unmapped footprint
+        off = np.where(is_read, rs.randint(0, fp, n),
+                       rs.randint(0, 64, n)).astype(np.int64)
+        tr = {
+            "arrival_us": np.cumsum(rs.exponential(30.0, n)),
+            "is_read": is_read,
+            "offset_page": off,
+            "n_pages": rs.randint(1, 6, n).astype(np.int64),
+        }
+        txns = decompose_trace(cfg, tr, footprint_pages=fp,
+                               precondition=False, overprovision=2.0)
+        assert txns.read_precond_pages > 0
+        assert txns.read_precond_pages == txns.ftl.read_precond_pages
+        # GC ran during on-demand mapping and its transactions were
+        # dropped from the stream (reads are modeled as hitting resident
+        # data) — but the work is counted
+        assert txns.ftl.gc_events > 0
+        assert txns.read_precond_gc_txns > 0
+        # … and a preconditioned decomposition reports zero such work
+        pre = decompose_trace(cfg, tr, footprint_pages=fp, precondition=True,
+                              overprovision=3.0)
+        assert pre.read_precond_pages == 0
+        assert pre.read_precond_gc_txns == 0

@@ -23,6 +23,43 @@ def test_table2_statistics(name):
     assert iat.mean() == pytest.approx(avg_iat, rel=0.08)
 
 
+def _seq_stream_offsets_ref(off, sz_align, is_seq, stream_of, n_align, n_streams):
+    """The pre-vectorization per-request loop, verbatim (pin reference)."""
+    off = off.copy()
+    streams = np.zeros((n_streams,), dtype=np.int64)
+    for i in range(len(off)):
+        if is_seq[i]:
+            off[i] = streams[stream_of[i]] % n_align
+        streams[stream_of[i]] = off[i] + sz_align[i]
+    return off
+
+
+@pytest.mark.parametrize("name,seed", [("usr_0", 0), ("src2_1", 3),
+                                       ("prxy_0", 7), ("ssd-00", 11)])
+def test_seq_stream_vectorization_pins_scalar_loop(name, seed):
+    """The grouped-cumsum stream resolver must reproduce the scalar loop's
+    offsets bit-for-bit (same RandomState draws, same cursor semantics)."""
+    from repro.traces.generator import _ALIGN, _seq_stream_offsets
+
+    n = 4000
+    rs = np.random.RandomState(seed)
+    n_align = 32768
+    n_streams = 8
+    off = rs.randint(0, n_align, n).astype(np.int64)
+    sz = rs.randint(1, 200, n).astype(np.int64)
+    is_seq = rs.rand(n) < 0.5
+    stream_of = rs.randint(0, n_streams, n)
+    got = _seq_stream_offsets(off, sz, is_seq, stream_of, n_align)
+    want = _seq_stream_offsets_ref(off, sz, is_seq, stream_of, n_align,
+                                   n_streams)
+    assert np.array_equal(got, want)
+    # and through the public generator (end-to-end determinism of the path)
+    tr = gen_trace(name, 1500, seed=seed)
+    assert (tr["offset_bytes"] >= 0).all()
+    assert (tr["offset_bytes"] < tr["footprint_bytes"]).all()
+    assert (tr["offset_bytes"] % _ALIGN == 0).all()
+
+
 def test_traces_are_deterministic():
     a = gen_trace("hm_0", 500, seed=9)
     b = gen_trace("hm_0", 500, seed=9)
