@@ -1,0 +1,60 @@
+"""Non-blocking perf-regression probe for the CI fast lane.
+
+Compares a fresh ``--smoke`` BENCH_*.json against the committed baseline
+and prints a GitHub Actions ``::warning::`` annotation when ``total_s``
+regresses by more than the threshold.  Always exits 0: CI runner timing is
+noisy (shared vCPUs), so this is a tripwire for humans, not a gate — real
+perf acceptance happens on the committed quick-preset BENCH artifacts.
+
+  python -m benchmarks.check_perf results/BENCH_smoke.json \
+      results/BENCH_smoke_baseline.json [--threshold 0.30]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", help="BENCH_*.json from this CI run")
+    ap.add_argument("baseline", help="committed baseline BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="warn when total_s exceeds baseline by this "
+                         "fraction (default 0.30)")
+    args = ap.parse_args()
+
+    # a tripwire must never trip the lane itself: any surprise (missing
+    # file, renamed field, null value) degrades to a warning, not a failure
+    try:
+        with open(args.fresh) as f:
+            fresh = json.load(f)
+        with open(args.baseline) as f:
+            base = json.load(f)
+        if fresh.get("preset") != base.get("preset"):
+            print(f"::warning::perf probe skipped: preset mismatch "
+                  f"({fresh.get('preset')} vs baseline "
+                  f"{base.get('preset')})")
+            return
+        t_new, t_old = float(fresh["total_s"]), float(base["total_s"])
+        ratio = t_new / max(t_old, 1e-9)
+        detail = (
+            f"total {t_new:.1f}s vs baseline {t_old:.1f}s ({ratio:.2f}x); "
+            f"sim {fresh.get('sim_s_total')}s vs {base.get('sim_s_total')}s, "
+            f"ftl {fresh.get('ftl_s_total')}s vs {base.get('ftl_s_total')}s, "
+            f"compile {fresh.get('compile_s_total')}s vs "
+            f"{base.get('compile_s_total')}s"
+        )
+    except Exception as e:  # noqa: BLE001
+        print(f"::warning::perf probe skipped: {type(e).__name__}: {e}")
+        return
+    if ratio > 1.0 + args.threshold:
+        print(f"::warning title=bench --smoke regression::{detail}")
+    else:
+        print(f"[check_perf] OK: {detail}")
+
+
+if __name__ == "__main__":
+    main()
+    sys.exit(0)

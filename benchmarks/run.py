@@ -27,13 +27,27 @@ Figures reproduced (as CSV tables; all values also summarized to stdout):
   fig15   sensitivity: 4x16 / 8x8 / 16x4 flash-controller configs
   tab4    router/link power & area overheads (analytic)
   sec31   the two-read service-time example (exact latencies)
+
+Every figure phase hands its whole (workload, config) list to the sweep
+planner (``repro.ssd.sweep_plan.prefetch``) before its body runs, so the
+phase's sweeps execute as lane groups sharded across the host CPU devices
+(one virtual XLA device per core, forced below *before* jax initializes)
+instead of one eager sweep per workload.
 """
 from __future__ import annotations
+
+import os
+
+# One XLA host device per core so the sweep planner can shard lane groups,
+# and the legacy (non-thunk) CPU runtime (see repro.xla_env).  MUST run
+# before any jax import: jax locks these on first init.
+from repro.xla_env import configure as _configure_xla
+
+_configure_xla()
 
 import argparse
 import csv
 import json
-import os
 import time
 
 import numpy as np
@@ -41,6 +55,7 @@ import numpy as np
 from repro.ssd import DESIGNS as ALL_DESIGNS
 from repro.ssd import bench, cost_optimized, perf_optimized
 from repro.ssd.bench import geomean, run_workload
+from repro.ssd.sweep_plan import RunRequest, prefetch
 from repro.traces import MIXES, WORKLOADS
 
 QUICK_WL = ["proj_3", "src2_1", "hm_0", "prxy_0", "YCSB_B", "ssd-10", "usr_0"]
@@ -79,7 +94,12 @@ def fig4_and_9_and_10_and_13(workloads, n_req, csv_dir, designs):
     rows9, rows10, rows13 = [], [], []
     summary = {}
     has_ideal = "ideal" in designs  # fig10 normalizes IOPS to the ideal lane
-    for cfg in (perf_optimized(), cost_optimized()):
+    cfgs = (perf_optimized(), cost_optimized())
+    # one planning pass over BOTH configs: perf/cost share a geometry, so
+    # their lanes pool into the same sharded groups
+    prefetch([RunRequest(wl, cfg, designs, n_req)
+              for cfg in cfgs for wl in workloads])
+    for cfg in cfgs:
         runs = _runs(workloads, cfg, n_req, designs)
         sp = {d: [] for d in designs}
         for wl, r in runs.items():
@@ -112,7 +132,9 @@ def fig4_and_9_and_10_and_13(workloads, n_req, csv_dir, designs):
 def fig11_tail_latency(n_req, csv_dir, designs):
     cfg = perf_optimized()
     rows = []
-    for wl in ("src1_0", "hm_0"):
+    wls = ("src1_0", "hm_0")
+    prefetch([RunRequest(wl, cfg, designs, n_req) for wl in wls])
+    for wl in wls:
         r = run_workload(wl, cfg, designs=designs, n_requests=n_req)
         for d in designs:
             p99 = r.results[d].p99_latency_us()
@@ -126,7 +148,9 @@ def fig12_mixes(n_req, csv_dir, designs, mixes=None):
     cfg = perf_optimized()
     rows = []
     gm = {d: [] for d in designs}
-    for mix in (mixes or sorted(MIXES)):
+    mixes = tuple(mixes or sorted(MIXES))
+    prefetch([RunRequest(mix, cfg, designs, n_req) for mix in mixes])
+    for mix in mixes:
         r = run_workload(mix, cfg, designs=designs, n_requests=n_req)
         for d in designs:
             s = r.speedup(d)
@@ -142,6 +166,7 @@ def fig14_power_energy(workloads, n_req, csv_dir, designs):
     cfg = perf_optimized()
     rows = []
     agg = {d: ([], []) for d in designs}
+    prefetch([RunRequest(wl, cfg, designs, n_req) for wl in workloads])
     for wl in workloads:
         r = run_workload(wl, cfg, designs=designs, n_requests=n_req)
         base = r.results["baseline"]
@@ -161,10 +186,14 @@ def fig14_power_energy(workloads, n_req, csv_dir, designs):
 def fig15_sensitivity(n_req, csv_dir, designs):
     rows = []
     designs = tuple(d for d in designs if d != "pnssd")  # needs rows==cols
-    for (r_, c_) in ((4, 16), (8, 8), (16, 4)):
+    meshes = ((4, 16), (8, 8), (16, 4))
+    wls = ("proj_3", "src2_1", "YCSB_B")
+    prefetch([RunRequest(wl, perf_optimized(rows=r_, cols=c_), designs, n_req)
+              for (r_, c_) in meshes for wl in wls])
+    for (r_, c_) in meshes:
         cfg = perf_optimized(rows=r_, cols=c_)
         gm = {d: [] for d in designs}
-        for wl in ("proj_3", "src2_1", "YCSB_B"):
+        for wl in wls:
             run = run_workload(wl, cfg, designs=designs, n_requests=n_req)
             for d in designs:
                 gm[d].append(run.speedup(d))
@@ -284,11 +313,17 @@ def main() -> None:
     def phase(name, fn, *a, **kw):
         t = time.time()
         f0, s0 = bench.PERF["ftl_s"], bench.PERF["sim_s"]
+        c0, e0 = bench.PERF["compile_s"], bench.PERF["exec_s"]
+        l0, g0 = bench.PERF["lanes"], len(bench.PERF["groups"])
         out = fn(*a, **kw)
         phases[name] = {
             "s": round(time.time() - t, 2),
             "ftl_s": round(bench.PERF["ftl_s"] - f0, 3),
             "sim_s": round(bench.PERF["sim_s"] - s0, 3),
+            "compile_s": round(bench.PERF["compile_s"] - c0, 3),
+            "exec_s": round(bench.PERF["exec_s"] - e0, 3),
+            "lanes": bench.PERF["lanes"] - l0,
+            "groups": len(bench.PERF["groups"]) - g0,
         }
         return out
 
@@ -338,7 +373,19 @@ def main() -> None:
             "sim_s_total": sim_total,
             "cache": {k: bench.PERF[k] for k in
                       ("decomp_hits", "decomp_misses", "run_hits",
-                       "run_subset_hits", "run_misses")},
+                       "run_subset_hits", "run_misses", "run_prefetched")},
+            # sweep-planner attribution: lane/step counts, devices, and the
+            # per-group compile-vs-execute split (satellite: make the
+            # speedup attributable)
+            "lanes": bench.PERF["lanes"],
+            "scan_steps": {
+                "valid": bench.PERF["scan_steps_valid"],
+                "padded": bench.PERF["scan_steps_padded"],
+            },
+            "devices_used": bench.PERF["devices_used"],
+            "compile_s_total": round(bench.PERF["compile_s"], 3),
+            "exec_s_total": round(bench.PERF["exec_s"], 3),
+            "groups": bench.PERF["groups"],
             "total_s": total,
             "speedups_geomean": {
                 cfg: {d: round(v, 4) for d, v in per.items()}

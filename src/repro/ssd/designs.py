@@ -343,3 +343,54 @@ def resolve_specs(designs: Sequence[str]) -> tuple:
         return tuple(REGISTRY[d] for d in designs)
     except KeyError as e:
         raise ValueError(f"unknown design {e.args[0]!r}; one of {DESIGNS}")
+
+
+# ---------------------------------------------------------------------------
+# channel-decomposition proof obligation
+#
+# The simulator may partition a lane's transactions by channel row and scan
+# the rows as parallel lanes (cutting sequential scan length from N to
+# ~N/rows) ONLY if the lane provably never couples state across rows.  That
+# is a property of the lowered tables, so it is verified here, at lowering
+# time, not assumed per design name: a lane qualifies iff its FC choice is
+# static (nearest-available selection reads every FC's live state) and every
+# resource its candidate masks can touch is touched by nodes of one row only.
+# baseline/pssd/ideal pass (their bus is private to a row or a chip); pnssd
+# fails (a column bus is shared by every row), nossd fails (dynamic FC +
+# XY paths cross rows), and scout lanes fail by construction (the scout
+# walks the global mesh).  Callers fall back to the flat scan on False.
+# ---------------------------------------------------------------------------
+
+
+def _mask_row_confined(lay: SweepLayout, low: dict) -> bool:
+    """Proof check for one lowered lane (see block comment above)."""
+    if bool(low["is_scout"]) or bool(low["fc_nearest"]):
+        return False
+    cmask = np.asarray(low["cmask"])
+    fc_fixed = np.asarray(low["fc_fixed"])
+    cand2_ok = np.asarray(low["cand2_ok"])
+    owner = np.full((lay.R_pad,), -1, dtype=np.int64)
+    for n in range(lay.n_nodes):
+        r = n // lay.cols
+        for cand in (0, 1):
+            # an invalid second candidate is evaluated but value-dead
+            # (``useA`` is forced), so only reachable masks are checked
+            if cand == 1 and not cand2_ok[n]:
+                continue
+            used = np.flatnonzero(cmask[fc_fixed[n, cand], n, cand])
+            clash = (owner[used] != -1) & (owner[used] != r)
+            if clash.any():
+                return False
+            owner[used] = r
+    return True
+
+
+@functools.lru_cache(maxsize=None)
+def rows_confined(cfg: SSDConfig, names: tuple) -> tuple:
+    """Per-lane bool: may this lane's scan be decomposed by channel row?"""
+    topo = build_mesh(cfg.rows, cfg.cols)
+    lay = sweep_layout(cfg)
+    return tuple(
+        _mask_row_confined(lay, _lower_one(cfg, topo, lay, REGISTRY[d]))
+        for d in names
+    )

@@ -14,14 +14,15 @@ design in ``repro.ssd.designs.REGISTRY`` lowers to padded tables
 and the step consumes only those arrays — shared buses are 1-link "meshes"
 with routing disabled (the scout degenerates to a zero-length path), pnSSD
 is two candidate 1-link masks, NoSSD is a static XY-path mask, Venice builds
-its mask with the scout at runtime.  ``simulate_sweep`` vmaps the scan over
-the design (and seed) axis, so an entire design-space sweep shares one
-compiled executable per (config, padded length, cost class) — lanes are
-grouped into statically-routed vs scout-routed classes because batched
-while-loops charge every lane the max iteration count of its batch;
-``simulate`` is the sweep of a single lane.  Executables take the design
-tables as *arguments*, so they are design-agnostic: changing the design set
-never recompiles.
+its mask with the scout at runtime.  ``simulate_sweep`` routes every lane
+through the sweep planner (``repro.ssd.sweep_plan``): lanes are pooled per
+cost class (statically-routed vs scout-routed), row-confined static lanes
+are channel-decomposed, and lanes run as unbatched chunk-trimmed scans
+dispatched asynchronously across the host CPU devices — all bit-identical
+to the flat scan of ``simulate``.  Executables take the design tables as
+*arguments*, so they are design-agnostic: changing the design set never
+recompiles; one executable per (geometry, capacity bucket, cost class,
+promotions, device) serves every lane, workload, config and phase.
 
 Designs (see ``designs.REGISTRY`` for the spec + ablation docs of each)
   baseline        multi-channel shared bus (Table 1)
@@ -43,11 +44,14 @@ NoSSD's buffered wormhole modeled as transient circuits per packet phase.
 from __future__ import annotations
 
 import functools
+import time
 from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.scout import make_tables, scout_route
 from repro.core.topology import build_mesh
@@ -55,7 +59,6 @@ from repro.ssd.config import SSDConfig, TICK_NS
 from repro.ssd.designs import (
     DESIGNS,
     REGISTRY,
-    lower_designs,
     resolve_specs,
     sweep_layout_geom,
 )
@@ -539,83 +542,56 @@ def _skip_out(tx: TxnArrays) -> StepOut:
     )
 
 
-_RUN1_CACHE: dict = {}
+# ---------------------------------------------------------------------------
+# chunked, trimmed, shardable runners
+#
+# Transactions are packed into *capacity*-sized buffers (few coarse
+# power-of-4 buckets, to bound the number of distinct executables) but the
+# scan itself is a ``fori_loop`` over CHUNK-step ``lax.scan`` chunks with a
+# *traced* trip count: one compiled program serves every trace length, and
+# execute time scales with the valid length rounded up to CHUNK — not with
+# the capacity bucket.  Each lane (its tables, seed and transaction stream
+# are all arguments) runs UNBATCHED inside its device shard of a
+# ``shard_map`` group — one lane per host CPU device; the sweep planner
+# sorts lanes from many workloads/configs/channel-rows by length so the
+# lanes sharing a group's barrier are of similar cost.
+#
+# NOTE on the XLA CPU runtime: this program shape — nested while-loops
+# (scout retry -> DFS -> scan chunk -> fori over chunks) — is pathological
+# for XLA's *thunk* CPU runtime: per-iteration executor synchronization
+# makes a scout step ~10x slower single-threaded, compiles ~4x slower,
+# and concurrent executions contend (measured 3-4x mutual slowdown).
+# ``benchmarks/run.py`` and the test conftest therefore force
+# ``--xla_cpu_use_thunk_runtime=false`` (the legacy runtime) alongside the
+# host device count; both are no-ops for correctness, which the parity
+# suite pins either way.
+# ---------------------------------------------------------------------------
+
+CHUNK = 1024  # scan-chunk granularity; trims pad waste to < one chunk
 
 
-def _build_sweep(cfg: SSDConfig, n_pad: int, n_lanes: int, k_max: int,
-                 has_scout: bool, fixed: tuple, tables):
-    """Resolve the compiled runner for a sweep group.
-
-    Multi-lane groups vmap a design-agnostic program (tables are traced
-    arguments).  1-lane groups — ``simulate`` and the common one-Venice
-    sweep — instead embed the lane's tables as closure constants, which
-    lets XLA specialize the scan about as tightly as a hand-written
-    per-design program; the cache keys on table *content*, so configs
-    lowering to identical tables (e.g. mesh designs under perf- and
-    cost-optimized configs) still share the executable."""
-    sig = _geom_sig(cfg)
-    if n_lanes != 1:
-        run = _build_sweep_cached(sig, n_pad, n_lanes, k_max, has_scout,
-                                  fixed)
-        return run
-    # key on the table bytes themselves (not a hash of them): the dict
-    # equality check makes a collision impossible rather than just unlikely
-    tkey = tuple(np.asarray(a).tobytes() for a in tables)
-    key = (sig, n_pad, k_max, has_scout, fixed, tkey)
-    run = _RUN1_CACHE.get(key)
-    if run is None:
-        run = _compile_run1(sig, n_pad, k_max, has_scout, fixed, tables)
-        _RUN1_CACHE[key] = run
-    return run
-
-
-def _compile_run1(sig, n_pad, k_max, has_scout, fixed, tables):
-    rows, cols, dies, planes_per_die, scout_hop_ns = sig
-    topo = build_mesh(rows, cols)
-    n_planes = rows * cols * dies * planes_per_die
-    lay = sweep_layout_geom(rows, cols)
-    stables = make_tables(topo)
-    init_state, step = _make_step(lay, stables, scout_hop_ns, n_planes,
-                                  k_max, not has_scout, fixed)
-    # the lane's view of the tables, embedded as compile-time constants
-    sp0 = jax.tree_util.tree_map(
-        lambda x: jnp.asarray(np.asarray(x)[0]), tables
-    )
-
-    def run1(tables_unused, seed, txns: TxnArrays):
-        state = init_state(seed[0])
-
-        def scan_step(st, tx):
-            def real(st):
-                return step(sp0, st, tx)
-
-            def skip(st):
-                return st, _skip_out(tx)
-
-            return jax.lax.cond(tx.valid, real, skip, st)
-
-        _, outs = jax.lax.scan(scan_step, state, txns)
-        return jax.tree_util.tree_map(lambda x: x[None], outs)
-
-    return jax.jit(run1)
+def host_device_count() -> int:
+    """Lane shards available (== --xla_force_host_platform_device_count)."""
+    return len(jax.devices())
 
 
 @functools.lru_cache(maxsize=None)
-def _build_sweep_cached(sig: tuple, n_pad: int, n_lanes: int, k_max: int,
-                        has_scout: bool, fixed: tuple):
-    """Compile one vmapped scan program per (geometry, padded length, lane
-    count, cost class).  Design tables are *arguments*, not closure
-    constants, so every design subset of the same lane count reuses the
-    same executable — and so do all configs sharing the geometry."""
-    rows, cols, dies, planes_per_die, scout_hop_ns = sig
-    topo = build_mesh(rows, cols)
-    n_planes = rows * cols * dies * planes_per_die
-    lay = sweep_layout_geom(rows, cols)
-    stables = make_tables(topo)
-    init_state, step = _make_step(lay, stables, scout_hop_ns, n_planes,
-                                  k_max, not has_scout, fixed)
+def _lane_mesh(n_shards: int) -> Mesh:
+    return Mesh(np.array(jax.devices()[:n_shards]), ("lanes",))
 
-    def lane_run(sp, seed, txns: TxnArrays):
+
+def _zero_out(capacity: int) -> StepOut:
+    z = jnp.zeros((capacity,), jnp.int32)
+    return StepOut(
+        completion=z, wait=z, conflict=jnp.zeros((capacity,), jnp.bool_),
+        hops=z, tries=z, scout_steps=z, misroutes=z, bus_hold=z, link_hold=z,
+    )
+
+
+def _make_lane_run(init_state, step, capacity: int):
+    """One lane: chunked scan with a dynamic (traced) chunk count."""
+
+    def lane_run(sp, seed, txns: TxnArrays, n_chunks):
         state = init_state(seed)
 
         def scan_step(st, tx):
@@ -627,10 +603,121 @@ def _build_sweep_cached(sig: tuple, n_pad: int, n_lanes: int, k_max: int,
 
             return jax.lax.cond(tx.valid, real, skip, st)
 
-        _, outs = jax.lax.scan(scan_step, state, txns)
-        return outs
+        def chunk_body(c, carry):
+            st, buf = carry
+            off = c * CHUNK
+            txc = jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, off, CHUNK, 0),
+                txns,
+            )
+            st, outs = jax.lax.scan(scan_step, st, txc)
+            buf = jax.tree_util.tree_map(
+                lambda b, o: jax.lax.dynamic_update_slice_in_dim(b, o, off, 0),
+                buf, outs,
+            )
+            return st, buf
 
-    return jax.jit(jax.vmap(lane_run, in_axes=(0, 0, None)))
+        _, buf = jax.lax.fori_loop(
+            0, n_chunks, chunk_body, (state, _zero_out(capacity))
+        )
+        return buf
+
+    return lane_run
+
+
+def _step_for(sig: tuple, k_max: int, has_scout: bool, fixed: tuple):
+    rows, cols, dies, planes_per_die, scout_hop_ns = sig
+    topo = build_mesh(rows, cols)
+    n_planes = rows * cols * dies * planes_per_die
+    lay = sweep_layout_geom(rows, cols)
+    stables = make_tables(topo)
+    return _make_step(lay, stables, scout_hop_ns, n_planes, k_max,
+                      not has_scout, fixed)
+
+
+@functools.lru_cache(maxsize=None)
+def _build_group_fn(sig: tuple, capacity: int, k_max: int,
+                    has_scout: bool, fixed: tuple, n_shards: int):
+    """One design-agnostic SPMD program per (geometry, capacity bucket,
+    cost class, promotions, shard count).  Tables/seeds/txns/chunk-counts
+    are all per-lane *arguments*, so every group of the pool — any designs,
+    any workloads, any configs of the geometry, any phase — reuses it.
+
+    A group carries exactly one lane per device shard, and the shard body
+    SQUEEZES its lane axis before running the scan: the lane stays
+    unbatched, which is load-bearing for CPU performance — a real
+    ``lax.cond`` skip (never a batched select that executes both branches)
+    and dynamic-slice resource indexing (``vmap`` would lower the per-step
+    state updates to generic batched gather/scatter kernels, measured ~50x
+    slower per scout step).  Multi-core parallelism comes from the shards
+    executing in parallel inside the one program, not from batching; each
+    shard's ``fori_loop`` trip count is its own lane's."""
+    init_state, step = _step_for(sig, k_max, has_scout, fixed)
+    lane_run = _make_lane_run(init_state, step, capacity)
+
+    def one(sp, seed, txns, n_chunks):
+        take0 = lambda a: a[0]
+        out = lane_run(
+            jax.tree_util.tree_map(take0, sp), seed[0],
+            jax.tree_util.tree_map(take0, txns), n_chunks[0],
+        )
+        return jax.tree_util.tree_map(lambda a: a[None], out)
+
+    if n_shards > 1:
+        spec = (P("lanes"),) * 4
+        fn = shard_map(one, mesh=_lane_mesh(n_shards), in_specs=spec,
+                       out_specs=P("lanes"), check_rep=False)
+    else:
+        fn = one
+    return jax.jit(fn)
+
+
+# AOT-compiled executables (kept separate from the builder lru so compile
+# wall-clock can be attributed per group in PERF).
+_EXEC_CACHE: dict = {}
+
+
+def run_group(sig: tuple, tables, seeds, txns: TxnArrays, n_chunks,
+              k_max: int, has_scout: bool, fixed: tuple,
+              n_shards: int) -> tuple:
+    """Execute one stacked lane group; returns (StepOut [G, cap], perf).
+
+    ``tables``/``txns`` carry a leading lane axis [G == n_shards] (numpy
+    trees); ``seeds``/``n_chunks`` are [G] arrays.  ``perf`` records the
+    compile-vs-execute split, lanes, and step counts for PERF accounting.
+    """
+    G = int(len(seeds))
+    capacity = int(np.asarray(txns.arrival).shape[1])
+    seeds_j = jnp.asarray(np.asarray(seeds, np.uint32))
+    ncs = np.asarray(n_chunks, np.int32)
+    ncs_j = jnp.asarray(ncs)
+    txns_j = jax.tree_util.tree_map(jnp.asarray, txns)
+    tab_j = jax.tree_util.tree_map(jnp.asarray, tables)
+    key = ("group", sig, capacity, G, k_max, has_scout, fixed, n_shards)
+    fn = _build_group_fn(sig, capacity, k_max, has_scout, fixed, n_shards)
+    if n_shards > 1:
+        sh = NamedSharding(_lane_mesh(n_shards), P("lanes"))
+        tab_j, seeds_j, txns_j, ncs_j = jax.tree_util.tree_map(
+            lambda a: jax.device_put(a, sh),
+            (tab_j, seeds_j, txns_j, ncs_j),
+        )
+    args = (tab_j, seeds_j, txns_j, ncs_j)
+    compiled = _EXEC_CACHE.get(key)
+    compile_s = 0.0
+    if compiled is None:
+        t0 = time.perf_counter()
+        compiled = fn.lower(*args).compile()
+        compile_s = time.perf_counter() - t0
+        _EXEC_CACHE[key] = compiled
+    t0 = time.perf_counter()
+    outs = jax.device_get(compiled(*args))
+    exec_s = time.perf_counter() - t0
+    perf = {
+        "lanes": G, "capacity": capacity, "shards": n_shards,
+        "scout": has_scout, "steps": int(ncs.sum()) * CHUNK,
+        "compile_s": round(compile_s, 3), "exec_s": round(exec_s, 3),
+    }
+    return outs, perf
 
 
 class SimResult(NamedTuple):
@@ -688,13 +775,9 @@ def _pad_to(n: int) -> int:
     return size
 
 
-def _nominal_order(cfg: SSDConfig, txns) -> np.ndarray:
-    """Order transactions by *nominal network-transfer time* (FIFO per plane,
-    zero network contention).  The scan commits resources in this order, so
-    commitments are near-chronological — the property that makes the in-order
-    O(1)-state commit faithful to an event-driven simulator.  A write stuck
-    behind a 100 us tPROG no longer reserves links/buses ahead of thousands
-    of transfers that really happen first."""
+def _nominal_order_ref(cfg: SSDConfig, txns) -> np.ndarray:
+    """Reference (per-transaction loop) for :func:`_nominal_order` — kept as
+    the parity oracle for the vectorized grouped-cumsum pass below."""
     arrival = np.asarray(txns["arrival"], dtype=np.int64)
     kind = np.asarray(txns["kind"])
     plane = np.asarray(txns["plane"])
@@ -721,43 +804,103 @@ def _nominal_order(cfg: SSDConfig, txns) -> np.ndarray:
     return np.argsort(nominal, kind="stable")
 
 
-def _pack_txns(cfg: SSDConfig, txns, order: np.ndarray, n_pad: int):
-    """Reorder + pad numpy transaction fields into device TxnArrays."""
+def _nominal_order(cfg: SSDConfig, txns) -> np.ndarray:
+    """Order transactions by *nominal network-transfer time* (FIFO per plane,
+    zero network contention).  The scan commits resources in this order, so
+    commitments are near-chronological — the property that makes the in-order
+    O(1)-state commit faithful to an event-driven simulator.  A write stuck
+    behind a 100 us tPROG no longer reserves links/buses ahead of thousands
+    of transfers that really happen first.
+
+    Vectorized as a grouped-cumsum pass (bit-exact to
+    :func:`_nominal_order_ref`): per plane, the FIFO recurrence
+    ``avail' = max(arrival, avail) + d`` unrolls to
+    ``avail_k = max(0, max_{j<k}(arrival_j - D_j)) + D_k`` with ``D`` the
+    in-plane exclusive prefix sum of the durations ``d`` — a segmented
+    cumsum plus a segmented running max over plane groups.
+    """
+    arrival = np.asarray(txns["arrival"], dtype=np.int64)
+    n = len(arrival)
+    if n == 0:
+        return np.empty((0,), dtype=np.int64)
+    kind = np.asarray(txns["kind"])
+    plane = np.asarray(txns["plane"])
+    nbytes = np.asarray(txns["nbytes"], dtype=np.int64)
+    xfer_est = nbytes // TICK_NS  # ~1 B/ns
+    t_r, t_w, t_e = cfg.t_read, cfg.t_prog, cfg.t_erase
+    d = np.where(
+        kind == KIND_READ, 1 + t_r + xfer_est,
+        np.where(kind == KIND_WRITE, xfer_est + t_w, np.int64(t_e)),
+    ).astype(np.int64)
+    # contiguous plane groups, (arrival, original index)-ordered within each
+    o = np.lexsort((np.arange(n), arrival, plane))
+    p_s, a_s, d_s = plane[o], arrival[o], d[o]
+    start = np.empty(n, dtype=bool)
+    start[0] = True
+    start[1:] = p_s[1:] != p_s[:-1]
+    excl = np.cumsum(d_s) - d_s
+    # in-group exclusive prefix sum: subtract each group's start value
+    # (``excl`` is nondecreasing, so a running max forward-fills the starts)
+    D = excl - np.maximum.accumulate(np.where(start, excl, -1))
+    v = a_s - D
+    # segmented running max via the monotone-offset trick: group ranks are
+    # nondecreasing along the sort, so adding rank*span makes accumulation
+    # never cross a group boundary
+    gid = np.cumsum(start) - 1
+    span = np.int64(v.max()) - np.int64(v.min()) + 1
+    m = np.maximum.accumulate(v + gid * span) - gid * span
+    # exclusive shift within the group; floor 0 = the initial plane_avail
+    m_excl = np.empty(n, dtype=np.int64)
+    m_excl[1:] = m[:-1]
+    m_excl[start] = 0
+    avail = np.maximum(m_excl, 0) + D
+    s = np.maximum(a_s, avail)
+    nom_s = s + np.where(kind[o] == KIND_READ, np.int64(1 + t_r), 0)
+    nominal = np.empty(n, dtype=np.int64)
+    nominal[o] = nom_s
+    return np.argsort(nominal, kind="stable")
+
+
+def _pack_txns(cfg: SSDConfig, txns, order: np.ndarray):
+    """Reorder numpy transaction fields into (host) TxnArrays, unpadded.
+
+    Capacity padding happens at group-stack time (the planner pads each
+    lane to its pool's capacity bucket), so the packed arrays here are the
+    natural length and can be re-sliced per channel row without copies of
+    the padding."""
     n = len(order)
 
-    def f(name, dtype, fill=0):
-        a = np.full((n_pad,), fill, dtype=dtype)
-        a[:n] = np.asarray(txns[name])[order].astype(dtype)
-        return jnp.asarray(a)
+    def f(name, dtype):
+        return np.asarray(txns[name])[order].astype(dtype)
 
-    kind = np.asarray(txns["kind"])[order].astype(np.int32)
+    kind = f("kind", np.int32)
     op = np.where(
         kind == KIND_READ,
         cfg.t_read,
         np.where(kind == KIND_WRITE, cfg.t_prog, cfg.t_erase),
     ).astype(np.int32)
-    op_pad = np.zeros((n_pad,), np.int32)
-    op_pad[:n] = op
-    valid = np.zeros((n_pad,), bool)
-    valid[:n] = True
 
     arrs = TxnArrays(
         arrival=f("arrival", np.int32),
-        kind=f("kind", np.int32),
+        kind=kind,
         plane=f("plane", np.int32),
         node=f("node", np.int32),
         row=f("row", np.int32),
         nbytes=f("nbytes", np.int32),
-        op_ticks=jnp.asarray(op_pad),
-        valid=jnp.asarray(valid),
+        op_ticks=op,
+        valid=np.ones((n,), dtype=bool),
     )
     return arrs, op
 
 
-def _finish_result(cfg: SSDConfig, design: str, lane: int, txns, order,
-                   op: np.ndarray, outs, n: int) -> SimResult:
-    """Numpy post-processing of one lane's scan outputs into a SimResult."""
-    completion = outs.completion[lane, :n]
+def _finish_result(cfg: SSDConfig, design: str, txns, order,
+                   op: np.ndarray, outs: StepOut, n: int) -> SimResult:
+    """Numpy post-processing of one lane's scan outputs into a SimResult.
+
+    ``outs`` holds this lane's per-transaction numpy arrays in scan
+    (ordered) space, length >= n (the planner merges channel-decomposed
+    rows back into that space before calling)."""
+    completion = outs.completion[:n]
     arrival = np.asarray(txns["arrival"])[order]
     latency = completion - arrival
     exec_ticks = int(completion.max() - arrival.min()) if n else 0
@@ -782,8 +925,8 @@ def _finish_result(cfg: SSDConfig, design: str, lane: int, txns, order,
         np.where(kind == KIND_WRITE, pm.die_prog_w, pm.die_erase_w),
     )
     flash_energy = float(np.sum(op.astype(np.float64) * tick_s * die_w))
-    bus_hold = int(outs.bus_hold[lane, :n].astype(np.int64).sum())
-    link_hold = int(outs.link_hold[lane, :n].astype(np.int64).sum())
+    bus_hold = int(outs.bus_hold[:n].astype(np.int64).sum())
+    link_hold = int(outs.link_hold[:n].astype(np.int64).sum())
     transfer_energy = (
         bus_hold * tick_s * pm.bus_active_w + link_hold * tick_s * pm.link_active_w
     )
@@ -795,11 +938,11 @@ def _finish_result(cfg: SSDConfig, design: str, lane: int, txns, order,
         completion=completion,
         latency=latency,
         req_latency=req_latency,
-        wait=outs.wait[lane, :n],
-        conflict=outs.conflict[lane, :n],
-        hops=outs.hops[lane, :n],
-        tries=outs.tries[lane, :n],
-        misroutes=outs.misroutes[lane, :n],
+        wait=outs.wait[:n],
+        conflict=outs.conflict[:n],
+        hops=outs.hops[:n],
+        tries=outs.tries[:n],
+        misroutes=outs.misroutes[:n],
         exec_ticks=exec_ticks,
         bus_hold_ticks=bus_hold,
         link_hold_ticks=link_hold,
@@ -814,22 +957,28 @@ def simulate_sweep(
     txns,
     designs: Sequence[str] = DESIGNS,
     seeds: int | Sequence[int] = 0,
+    decompose: bool | str = "auto",
 ) -> list[SimResult]:
-    """Run the whole design sweep as ONE batched jitted program.
+    """Run the whole design sweep as batched, sharded jitted programs.
 
     ``txns`` is a dict/namespace with numpy fields: arrival (ticks int),
     kind, plane, node, row, nbytes, req (see ``repro.ssd.ftl``).
     ``designs`` are registry names (a name may repeat, e.g. to sweep seeds
     for one design); ``seeds`` is one int for every lane or a per-lane
-    sequence.  Returns SimResults in lane order.  Lanes vmap over one
-    compiled executable per (geometry, padded length, cost class, lane
-    count) — the design tables are traced arguments, so the executable is
-    design-agnostic; only structure-gating scalars every lane agrees on
-    (``_PROMOTABLE``) specialize the compile, and they fall back to traced
-    values for heterogeneous sweeps.
+    sequence.  Returns SimResults in lane order.
+
+    Execution is delegated to the sweep planner (``repro.ssd.sweep_plan``):
+    lanes are grouped per cost class, statically-routed lanes whose lowered
+    masks are provably row-confined are decomposed by channel row
+    (``decompose``: True / False / "auto" — all three are bit-identical;
+    the flag only gates the perf transformation), and lane groups are
+    sharded across host CPU devices.  Results are bit-identical to the flat
+    single-lane scan for every design.
     """
+    from repro.ssd.sweep_plan import execute_sim_runs
+
     designs = tuple(designs)
-    specs = resolve_specs(designs)
+    resolve_specs(designs)
     if isinstance(seeds, (int, np.integer)):
         seeds = (int(seeds),) * len(designs)
     seeds = tuple(int(s) for s in seeds)
@@ -837,43 +986,14 @@ def simulate_sweep(
         raise ValueError(
             f"got {len(seeds)} seeds for {len(designs)} design lanes"
         )
-
-    n = len(txns["arrival"])
-    n_pad = _pad_to(n)
-    order = _nominal_order(cfg, txns)
-    arrs, op = _pack_txns(cfg, txns, order, n_pad)
-
-    # Partition lanes into the two cost classes.  Batched while-loops make
-    # every lane pay the max iteration count of its batch (and CPU scatters
-    # serialize per lane), so batching cheap statically-routed lanes with
-    # scout lanes would multiply, not amortize, runtime.  Each class is one
-    # design-agnostic executable; within a class, lane costs are homogeneous
-    # and the batch is near-free.
-    results: list[SimResult | None] = [None] * len(designs)
-    for is_scout_group in (False, True):
-        lanes = [
-            i for i, s in enumerate(specs)
-            if (s.kind == "scout") == is_scout_group
-        ]
-        if not lanes:
-            continue
-        names_g = tuple(designs[i] for i in lanes)
-        specs_g = [specs[i] for i in lanes]
-        tables = lower_designs(cfg, names_g)
-        k_max = max(s.n_scouts for s in specs_g)
-        run = _build_sweep(cfg, n_pad, len(lanes), k_max, is_scout_group,
-                           _promotions(tables), tables)
-        seed_arr = jnp.asarray(
-            np.asarray([seeds[i] | 1 for i in lanes], np.uint32)
-        )
-        outs = jax.device_get(run(tables, seed_arr, arrs))
-        for j, i in enumerate(lanes):
-            results[i] = _finish_result(
-                cfg, designs[i], j, txns, order, op, outs, n
-            )
-    return results
+    return execute_sim_runs([(cfg, txns, designs, seeds, decompose)])[0]
 
 
 def simulate(cfg: SSDConfig, txns, design: str, seed: int = 0) -> SimResult:
-    """Run one (config, design) simulation — a 1-lane design sweep."""
-    return simulate_sweep(cfg, txns, (design,), (seed,))[0]
+    """Run one (config, design) simulation — a 1-lane design sweep.
+
+    This is the flat-scan parity oracle for the decomposed/sharded paths:
+    it never channel-decomposes.  Like every lane, it runs the shared
+    design-agnostic executable of its (geometry, capacity, cost class,
+    promotions) — only the 1-lane pool's *promotions* specialize it."""
+    return simulate_sweep(cfg, txns, (design,), (seed,), decompose=False)[0]

@@ -1,0 +1,380 @@
+"""Deferred sweep planner: conflict-free execution of the simulator itself.
+
+The paper's thesis — exploit the parallelism the structure already gives you
+by removing path conflicts — applied to the simulator: sweep lanes across
+workloads, configs and seeds are fully independent, and within a
+statically-routed lane the bus-design resources are disjoint per channel
+row.  The planner turns both into wall-clock parallelism while keeping every
+result bit-identical to the flat single-lane scan:
+
+Channel decomposition (tentpole 1)
+    A statically-routed lane whose lowered masks are *provably row-confined*
+    (``designs.rows_confined`` — verified at lowering time, never assumed
+    per design name) is split into one lane per channel row, scanning only
+    that row's transactions.  Rows touch disjoint resources and disjoint
+    planes, so per-resource commit order — and therefore every output — is
+    unchanged; sequential scan length drops from N to ~max-row (~N/rows).
+    Lanes that fail the proof (pnssd couples rows through its column buses,
+    nossd selects FCs dynamically, scouts walk the global mesh) fall back
+    to the flat scan.
+
+Planning + multi-core sharding (tentpole 2)
+    ``execute_sim_runs`` collects every pending (cfg, txns, designs, seeds)
+    run, lowers each to lanes, and pools lanes by (geometry, cost class) —
+    perf/cost configs of one geometry share a pool, and the two cost
+    classes stay apart because lanes sharing a group's barrier must not
+    pay each other's program cost (promotions and the scout ``k_max`` are
+    pool-wide).  Pool lanes are sorted by chunk count and cut into
+    ``shard_map`` groups of one lane per host CPU device
+    (``--xla_force_host_platform_device_count``, set by
+    ``benchmarks/run.py`` before jax initializes): the shards of a group
+    execute in parallel inside one SPMD program while each lane stays
+    UNBATCHED in its shard (vmap-batching lanes measured ~50x slower per
+    scout step on CPU — see ``sim._build_group_fn``), and the sorting
+    keeps a group's barrier cheap.  Every group of a pool shares one
+    executable (tables/seed/txns/chunk-count are arguments).  XLA's thunk
+    CPU runtime is disabled for this program shape (~10x per-step, see
+    the runtime note in ``sim``).
+
+Trimmed scans
+    After grouping, each lane's scan runs only ``ceil(n / CHUNK)`` chunks
+    of its capacity bucket (dynamic trip count, ``sim.CHUNK`` = 1024): the
+    up-to-4x cond-skipped steps the power-of-4 buckets used to charge are
+    gone, and padded-vs-valid step counts are recorded in ``bench.PERF``.
+
+``bench.run_workload`` routes every cache miss through this planner;
+``prefetch`` lets a figure phase hand over its whole workload list so one
+planning pass serves the phase from the run cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro.ssd import bench
+from repro.ssd import sim as S
+from repro.ssd.config import SSDConfig
+from repro.ssd.designs import (
+    KIND_SCOUT,
+    LaneTables,
+    lower_designs,
+    resolve_specs,
+    rows_confined,
+)
+
+__all__ = ["RunRequest", "execute_requests", "execute_sim_runs", "prefetch"]
+
+# "auto" channel-decomposes a row-confined lane only when every row is
+# expected to span several chunks (n >= rows * this * CHUNK): each row-lane
+# pays chunk round-up, so short traces cost more as rows than they save in
+# scan depth.  Policy only: decomposed and flat scans are bit-identical.
+AUTO_DECOMPOSE_MIN_CHUNKS_PER_ROW = 4
+
+# Capacity high-water mark per geometry signature: a pool reuses the
+# largest capacity bucket its geometry has seen so executables keyed on
+# capacity are not recompiled for smaller later pools (execute time scales
+# with the trimmed chunk count, not the capacity).
+_CAP_SEEN: dict = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class RunRequest:
+    """One pending ``bench.run_workload`` call, planned for batched
+    execution."""
+
+    name: str
+    cfg: SSDConfig
+    designs: tuple
+    n_requests: int | None = None
+    target_util: float | None = 1.5
+    seed: int = 0
+
+
+class _Lane:
+    """One scan lane: a (run, design[, channel row]) unit of work."""
+
+    __slots__ = ("run_idx", "design_idx", "seed", "tables_row", "txns",
+                 "n", "pos", "spec", "out")
+
+    def __init__(self, run_idx, design_idx, seed, tables_row, txns, n, pos,
+                 spec):
+        self.run_idx = run_idx
+        self.design_idx = design_idx
+        self.seed = seed
+        self.tables_row = tables_row  # LaneTables row, numpy, no lane axis
+        self.txns = txns  # TxnArrays, numpy, natural length n
+        self.n = n
+        self.pos = pos  # positions in the run's ordered space (None = all)
+        self.spec = spec
+        self.out = None  # StepOut numpy [capacity], filled by _run_pool
+
+    @property
+    def n_chunks(self) -> int:
+        return -(-self.n // S.CHUNK)  # ceil; 0 chunks for an empty lane
+
+
+def _want_decompose(flag, spec, confined: bool, cfg: SSDConfig, n: int,
+                    rows_ok: bool) -> bool:
+    if spec.kind == KIND_SCOUT or not confined or cfg.rows <= 1 or n == 0:
+        return False
+    if not rows_ok:  # txn row field inconsistent with node layout — safety
+        return False
+    if flag is True:
+        return True
+    return (flag == "auto"
+            and n >= cfg.rows * AUTO_DECOMPOSE_MIN_CHUNKS_PER_ROW * S.CHUNK)
+
+
+def _slice_txns(txns: S.TxnArrays, idx: np.ndarray) -> S.TxnArrays:
+    return S.TxnArrays(*(a[idx] for a in txns))
+
+
+def _pad_txns(txns: S.TxnArrays, cap: int) -> S.TxnArrays:
+    out = []
+    for a in txns:
+        b = np.zeros((cap,), dtype=a.dtype)
+        b[: len(a)] = a
+        out.append(b)
+    return S.TxnArrays(*out)
+
+
+def _pool_promotions(lanes: list) -> tuple:
+    """Common value of each promotable scalar across the POOL (not per
+    group): every group of the pool must share one executable, so the
+    specialization is computed once over all its lanes."""
+
+    class _Stack:
+        def __getattr__(self, name):
+            return np.stack(
+                [np.asarray(getattr(ln.tables_row, name)) for ln in lanes]
+            )
+
+    return S._promotions(_Stack())
+
+
+def _run_pool(sig: tuple, lanes: list, has_scout: bool) -> list:
+    """Execute one (geometry, cost class) pool of lanes; fills lane.out.
+
+    Returns the pool's perf records (one entry per dispatched group).
+    """
+    n_shards = S.host_device_count()
+    k_max = (max(ln.spec.n_scouts for ln in lanes) if has_scout else 1)
+    fixed = _pool_promotions(lanes)
+    cap = max(_CAP_SEEN.get(sig, 0), S._pad_to(max(ln.n for ln in lanes)))
+    _CAP_SEEN[sig] = cap
+
+    perf_groups = []
+    # one lane per device shard, unbatched inside (sim._build_group_fn);
+    # sorting by length keeps the lanes sharing a group's barrier similar
+    # in cost.  A pool smaller than the device count compiles at its own
+    # size (no duplicate work for e.g. a solo ``simulate`` on a many-core
+    # host); only the remainder block of a larger pool is padded with a
+    # duplicate lane, where the discarded re-execution is cheaper than a
+    # smaller-group executable
+    G = max(1, min(n_shards, len(lanes)))
+    order = sorted(range(len(lanes)), key=lambda i: lanes[i].n_chunks)
+    groups = []
+    for i in range(0, len(order), G):
+        block = [lanes[j] for j in order[i : i + G]]
+        while len(block) % G:
+            block.append(block[-1])
+        groups.append(block)
+
+    for group in groups:
+        tables = LaneTables(
+            *(np.stack([np.asarray(getattr(ln.tables_row, f))
+                        for ln in group])
+              for f in LaneTables._fields)
+        )
+        seeds = np.asarray([ln.seed for ln in group], np.uint32)
+        txns = S.TxnArrays(
+            *(np.stack(cols) for cols in
+              zip(*(_pad_txns(ln.txns, cap) for ln in group)))
+        )
+        ncs = np.asarray([ln.n_chunks for ln in group], np.int32)
+        outs, perf = S.run_group(sig, tables, seeds, txns, ncs, k_max,
+                                 has_scout, fixed, len(group))
+        seen = set()
+        for j, ln in enumerate(group):
+            if id(ln) in seen:  # padding duplicate — outputs discarded
+                continue
+            seen.add(id(ln))
+            ln.out = S.StepOut(*(np.asarray(a)[j] for a in outs))
+        # attribute real lanes; "steps" keeps counting the duplicates'
+        # re-execution — it is the executed-waste metric
+        perf["lanes"] = len(seen)
+        perf_groups.append(perf)
+    return perf_groups
+
+
+def execute_sim_runs(runs: Sequence[tuple]) -> list:
+    """Execute many sweeps as pooled, sharded lane groups.
+
+    ``runs``: iterable of ``(cfg, txns, designs, seeds, decompose)`` —
+    ``seeds`` a per-lane tuple.  Returns per-run lists of
+    :class:`~repro.ssd.sim.SimResult`, each bit-identical to
+    ``sim.simulate`` of that lane alone.
+    """
+    runs = list(runs)
+    prepared = []  # (cfg, txns, designs, order, op, n)
+    pools: dict = {}
+    for run_idx, (cfg, txns, designs, seeds, decompose) in enumerate(runs):
+        designs = tuple(designs)
+        specs = resolve_specs(designs)
+        order = S._nominal_order(cfg, txns)
+        n = len(order)
+        packed, op = S._pack_txns(cfg, txns, order)
+        prepared.append((cfg, txns, designs, order, op, n))
+        confined = rows_confined(cfg, designs)
+        tables = lower_designs(cfg, designs)
+        rows_np = np.asarray(packed.row)
+        rows_ok = bool(
+            np.array_equal(rows_np, np.asarray(packed.node) // cfg.cols)
+        )
+        row_pos = None
+        sig = S._geom_sig(cfg)
+        for i, spec in enumerate(specs):
+            tables_row = LaneTables(
+                *(np.asarray(a)[i] for a in tables)
+            )
+            seed = seeds[i] | 1
+            scout = spec.kind == KIND_SCOUT
+            key = (sig, scout)
+            dec = _want_decompose(decompose, spec, confined[i], cfg, n,
+                                  rows_ok)
+            if dec and row_pos is None:
+                row_pos = [np.flatnonzero(rows_np == r)
+                           for r in range(cfg.rows)]
+            lane_list = pools.setdefault(key, [])
+            if dec:
+                for pos in row_pos:
+                    if len(pos) == 0:
+                        continue
+                    lane_list.append(_Lane(
+                        run_idx, i, seed, tables_row,
+                        _slice_txns(packed, pos), len(pos), pos, spec,
+                    ))
+            else:
+                lane_list.append(_Lane(
+                    run_idx, i, seed, tables_row, packed, n, None, spec,
+                ))
+
+    all_groups = []
+    for (sig, scout), lanes in pools.items():
+        all_groups.extend(_run_pool(sig, lanes, scout))
+
+    # ---- PERF accounting (bench.PERF is the process-wide scoreboard) ----
+    perf = bench.PERF
+    if all_groups:  # devices actually used, not merely available
+        perf["devices_used"] = max(perf.get("devices_used", 0),
+                                   max(g["shards"] for g in all_groups))
+    for g in all_groups:
+        perf["lanes"] = perf.get("lanes", 0) + g["lanes"]
+        perf["scan_steps_padded"] = (
+            perf.get("scan_steps_padded", 0) + g["steps"]
+        )
+        perf["compile_s"] = perf.get("compile_s", 0.0) + g["compile_s"]
+        perf["exec_s"] = perf.get("exec_s", 0.0) + g["exec_s"]
+    perf.setdefault("groups", []).extend(all_groups)
+
+    # ---- merge lanes back into per-run SimResults ----
+    results: list = []
+    by_run: dict = {}
+    for lanes in pools.values():
+        for ln in lanes:
+            by_run.setdefault((ln.run_idx, ln.design_idx), []).append(ln)
+    for run_idx, (cfg, txns, designs, order, op, n) in enumerate(prepared):
+        run_res = []
+        for i, design in enumerate(designs):
+            lanes = by_run[(run_idx, i)]
+            perf["scan_steps_valid"] = (
+                perf.get("scan_steps_valid", 0) + sum(ln.n for ln in lanes)
+            )
+            if len(lanes) == 1 and lanes[0].pos is None:
+                outs = lanes[0].out
+            else:  # channel-decomposed: scatter rows back to ordered space
+                outs = S.StepOut(*(
+                    np.zeros((n,), dtype=np.asarray(f).dtype)
+                    for f in lanes[0].out
+                ))
+                for ln in lanes:
+                    for dst, src in zip(outs, ln.out):
+                        dst[ln.pos] = src[: ln.n]
+            run_res.append(
+                S._finish_result(cfg, design, txns, order, op, outs, n)
+            )
+        results.append(run_res)
+    return results
+
+
+def _request_key(rq: RunRequest) -> tuple:
+    return (rq.name, rq.cfg, rq.designs, rq.n_requests, rq.target_util,
+            rq.seed)
+
+
+def execute_requests(requests: Sequence[RunRequest]) -> list:
+    """Trace + decompose + simulate a batch of workload requests as one
+    planned execution; results are inserted into ``bench._RUN_CACHE`` under
+    the exact keys ``bench.run_workload`` uses."""
+    from repro.traces.generator import default_n_requests, to_pages, trace_for
+
+    sims, meta = [], []
+    for rq in requests:
+        n_req = rq.n_requests or default_n_requests(rq.name)
+        trace = trace_for(rq.name, n_req, rq.seed)
+        accel = 1.0
+        if rq.target_util is not None:
+            trace, accel = bench.accelerate(trace, rq.cfg, rq.target_util)
+        pages = to_pages(trace, rq.cfg.page_bytes)
+        t0 = time.perf_counter()
+        txns = bench.decompose_cached(rq.cfg, pages,
+                                      int(pages["footprint_pages"]))
+        bench.PERF["ftl_s"] += time.perf_counter() - t0
+        seeds = ((rq.seed + 7),) * len(rq.designs)
+        sims.append((rq.cfg, txns, rq.designs, seeds, "auto"))
+        meta.append((accel, txns))
+    t0 = time.perf_counter()
+    all_results = execute_sim_runs(sims)
+    bench.PERF["sim_s"] += time.perf_counter() - t0
+    out = []
+    # a prefetched phase reads the whole batch back AFTER this returns, so
+    # the batch must survive in the LRU together — insert with a cap at
+    # least the batch size (later normal-cap inserts shrink the cache back
+    # down, so this pins the batch without permanently growing the cap)
+    cap = max(bench._RUN_CACHE_MAX, len(requests))
+    for rq, (accel, txns), results in zip(requests, meta, all_results):
+        run = bench.WorkloadRun(
+            name=rq.name, cfg=rq.cfg, accel=accel,
+            n_requests=txns.n_requests,
+            results=dict(zip(rq.designs, results)),
+        )
+        bench._lru_put(bench._RUN_CACHE, _request_key(rq), run, cap)
+        out.append(run)
+    return out
+
+
+def prefetch(requests: Sequence[RunRequest]) -> None:
+    """Plan and execute every not-yet-cached request as one batch.
+
+    A figure phase calls this with its whole (workload, config) list; the
+    phase body's ``run_workload`` calls are then all served from the run
+    cache, so the phase's sweeps execute as pooled sharded groups instead
+    of one eager sweep per workload."""
+    pending, seen = [], set()
+    for rq in requests:
+        key = _request_key(rq)
+        if key in seen:
+            continue
+        seen.add(key)
+        # silent probe: planned work is counted as ``run_prefetched`` so
+        # the hit/miss telemetry keeps meaning "work avoided/incurred by a
+        # run_workload call" (the phase body's hits on prefetched entries
+        # are real cache hits — the plan warmed them)
+        if bench._cached_run(*key, count=False) is None:
+            pending.append(rq)
+    if pending:
+        bench.PERF["run_prefetched"] += len(pending)
+        execute_requests(pending)

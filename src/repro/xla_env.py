@@ -1,0 +1,34 @@
+"""XLA CPU runtime flags for the sweep planner — set BEFORE jax imports.
+
+jax locks the host platform device count and the CPU runtime choice on
+first init, so every entry point that wants the planner's multi-core
+sharded execution (``benchmarks/run.py``, the test conftest) must append
+these to ``XLA_FLAGS`` before anything imports jax.  This module is
+deliberately import-free of jax (``repro`` is a namespace package, so
+importing it pulls in nothing else).
+
+Why the legacy (non-thunk) runtime: the simulator's nested-while program
+shape (scout retry -> DFS -> scan chunk -> fori over chunks) is
+pathological for XLA's thunk CPU executor — ~10x slower scout steps, ~4x
+slower compiles, and 3-4x mutual slowdown of concurrent executions (see
+the runtime note in ``repro.ssd.sim``).  Both flags are perf-only;
+correctness is runtime-independent and pinned by the parity suite.
+"""
+from __future__ import annotations
+
+import os
+
+
+def configure(device_count: int | str | None = None) -> None:
+    """Append the planner's XLA flags to ``XLA_FLAGS`` (each only if the
+    caller/user hasn't already set it).  ``device_count`` defaults to the
+    ``BENCH_DEVICES`` env var, then the machine's core count."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        n = device_count or os.environ.get(
+            "BENCH_DEVICES", str(os.cpu_count() or 1)
+        )
+        flags = f"{flags} --xla_force_host_platform_device_count={n}"
+    if "--xla_cpu_use_thunk_runtime" not in flags:
+        flags = f"{flags} --xla_cpu_use_thunk_runtime=false"
+    os.environ["XLA_FLAGS"] = flags.strip()

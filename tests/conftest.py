@@ -5,6 +5,16 @@ hold on a 2x2 mesh with short traces, which compiles in seconds.  Heavy
 full-geometry sweeps are marked ``@pytest.mark.slow`` and excluded from the
 default run (see pytest.ini).
 """
+# Two virtual XLA host devices so the whole tier runs against the sweep
+# planner's sharded (shard_map) execution path — the multi-core layout the
+# benchmarks use — and the legacy (non-thunk) CPU runtime the benchmarks
+# run under (see repro.xla_env).  The single-device environment is covered
+# by the subprocess parity test in tests/test_sweep_plan.py.  MUST run
+# before any jax import: jax locks these on first init.
+from repro.xla_env import configure as _configure_xla
+
+_configure_xla(device_count=2)
+
 import numpy as np
 import pytest
 
