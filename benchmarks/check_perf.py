@@ -46,6 +46,21 @@ def main() -> None:
             f"compile {fresh.get('compile_s_total')}s vs "
             f"{base.get('compile_s_total')}s"
         )
+        # per-phase breakdown: phases are compared only when BOTH runs have
+        # them, so a baseline predating a new phase (e.g. ``tail``) never
+        # trips the probe — new phases are reported informationally and
+        # start being compared once the baseline is regenerated
+        ph_new = fresh.get("phases") or {}
+        ph_old = base.get("phases") or {}
+        for name in ph_new.keys() - ph_old.keys():
+            print(f"[check_perf] phase '{name}' "
+                  f"({ph_new[name].get('s')}s) not in baseline — skipped")
+        for name in sorted(ph_new.keys() & ph_old.keys()):
+            s_new = float(ph_new[name].get("s", 0.0) or 0.0)
+            s_old = float(ph_old[name].get("s", 0.0) or 0.0)
+            if s_old >= 1.0 and s_new > s_old * (1.0 + args.threshold):
+                print(f"::warning title=bench --smoke phase regression::"
+                      f"{name}: {s_new:.1f}s vs baseline {s_old:.1f}s")
     except Exception as e:  # noqa: BLE001
         print(f"::warning::perf probe skipped: {type(e).__name__}: {e}")
         return

@@ -27,6 +27,9 @@ Figures reproduced (as CSV tables; all values also summarized to stdout):
   fig15   sensitivity: 4x16 / 8x8 / 16x4 flash-controller configs
   tab4    router/link power & area overheads (analytic)
   sec31   the two-read service-time example (exact latencies)
+  tail    beyond-figures QoS surface (workloads subsystem): closed-loop
+          queue-depth sweeps (synthetic + bundled real-trace fixture) and
+          multi-tenant fairness — per-design p50/p95/p99 into BENCH_*.json
 
 Every figure phase hands its whole (workload, config) list to the sweep
 planner (``repro.ssd.sweep_plan.prefetch``) before its body runs, so the
@@ -68,7 +71,13 @@ N_REQ_QUICK = 2500
 SMOKE_WL = ["hm_0"]
 SMOKE_DESIGNS = ("baseline", "venice")
 N_REQ_SMOKE = 240
-SMOKE_PHASES = ("fig4_9_10_13", "tab4", "sec31")
+SMOKE_PHASES = ("fig4_9_10_13", "tail", "tab4", "sec31")
+
+# bundled anonymized MSR-format trace (tests/data, <50 KB): the real-trace
+# leg of the tail phase and the ingestion tests share this fixture
+FIXTURE_TRACE = os.path.join(
+    os.path.dirname(__file__), "..", "tests", "data", "msr_sample.csv"
+)
 
 
 def _rows_to_csv(path, header, rows):
@@ -205,6 +214,61 @@ def fig15_sensitivity(n_req, csv_dir, designs):
                  ["mesh", "design", "geomean_speedup"], rows)
 
 
+def tail_qos(n_req, csv_dir, designs, smoke=False):
+    """QoS surface (workloads subsystem): closed-loop queue-depth sweeps on
+    a synthetic workload AND the bundled real-trace fixture, plus a
+    multi-tenant fairness scenario — per-design p50/p95/p99 + per-tenant
+    slowdown/fairness, exported under the ``tail`` key of BENCH_*.json."""
+    from repro.workloads import ingest_file
+    from repro.workloads.scenario import (
+        MultiTenantMix,
+        QueueDepthSweep,
+        run_scenario,
+    )
+
+    cfg = perf_optimized()
+    fixture = ingest_file(FIXTURE_TRACE, name="msr_fixture")
+    qds = (1, 8, 64) if smoke else (1, 4, 16, 64)
+    iters = 3 if smoke else 6  # feedback rounds (see QueueDepthSweep doc)
+    scns = [QueueDepthSweep(fixture, qds=qds, iters=iters,
+                            n_requests=(240 if smoke else None))]
+    if not smoke:  # the synthetic leg of the QD acceptance sweep:
+        # read-heavy proj_3 — writes bury the depth response under
+        # GC/tPROG plane time, reads expose the channel-conflict queueing
+        scns.insert(0, QueueDepthSweep("proj_3", qds=qds, iters=iters,
+                                       n_requests=800))
+    scns.append(MultiTenantMix(("mix1",),
+                               n_requests_each=(120 if smoke else 400)))
+    records, rows_qd, rows_fair = [], [], []
+    for scn in scns:
+        rec = run_scenario(cfg, scn, designs)
+        records.append(rec)
+        if rec["scenario"] == "queue_depth_sweep":
+            for d, per in rec["designs"].items():
+                for q, m in per.items():
+                    rows_qd.append([rec["workload"], d, q, m["p50_us"],
+                                    m["p95_us"], m["p99_us"], m["iops"]])
+            p99 = {d: per[str(qds[-1])]["p99_us"]
+                   for d, per in rec["designs"].items()}
+            print(f"[tail] {rec['workload']} QD{qds[-1]} p99: "
+                  + " ".join(f"{d}={v:.0f}us" for d, v in p99.items()))
+        else:
+            for d, m in rec["designs"].items():
+                for t, tm in m.get("tenants", {}).items():
+                    rows_fair.append([rec["mix"], d, t, tm["p99_us"],
+                                      tm.get("slowdown_vs_solo", ""),
+                                      m["fairness"]])
+                print(f"[tail] {rec['mix']} {d}: fairness={m['fairness']:.3f}"
+                      f" p99={m['p99_us']:.0f}us")
+    _rows_to_csv(os.path.join(csv_dir, "tail_qd.csv"),
+                 ["workload", "design", "qd", "p50_us", "p95_us", "p99_us",
+                  "iops"], rows_qd)
+    _rows_to_csv(os.path.join(csv_dir, "tail_fairness.csv"),
+                 ["mix", "design", "tenant", "p99_us", "slowdown_vs_solo",
+                  "fairness"], rows_fair)
+    return records
+
+
 def tab4_overheads(csv_dir):
     """Analytic reproduction of Table 4 / §6.6 arithmetic."""
     router_mw = 0.241
@@ -277,7 +341,7 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI probe: 1 workload x 2 designs, core phases only")
     ap.add_argument("--only", default=None,
-                    help="fig4|fig9|fig11|fig12|fig14|fig15|tab4|sec31")
+                    help="fig4|fig9|fig11|fig12|fig14|fig15|tail|tab4|sec31")
     ap.add_argument("--csv", default="results")
     ap.add_argument("--n-req", type=int, default=None)
     ap.add_argument("--designs", default=None, metavar="D1,D2,...",
@@ -345,6 +409,10 @@ def main() -> None:
               designs)
     if want("fig15"):
         phase("fig15", fig15_sensitivity, n_req, args.csv, designs)
+    tail_records = []
+    if want("tail"):
+        tail_records = phase("tail", tail_qos, n_req, args.csv, designs,
+                             smoke=args.smoke)
     if want("tab4"):
         phase("tab4", tab4_overheads, args.csv)
     if want("sec31"):
@@ -386,6 +454,12 @@ def main() -> None:
             "compile_s_total": round(bench.PERF["compile_s"], 3),
             "exec_s_total": round(bench.PERF["exec_s"], 3),
             "groups": bench.PERF["groups"],
+            # accelerated-replay audit: per-(workload, config) scale factor
+            # and offered utilization (satellite — previously dropped)
+            "accel": bench.PERF["accel"],
+            # QoS surface: per-design p50/p95/p99 + per-tenant fairness
+            # from the tail phase's scenarios
+            "tail": tail_records,
             "total_s": total,
             "speedups_geomean": {
                 cfg: {d: round(v, 4) for d, v in per.items()}

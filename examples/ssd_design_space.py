@@ -5,28 +5,68 @@ batched sweep per cost class (see repro.ssd.sim.simulate_sweep); adding a
 design to the sweep is a registry name, not new simulator code.
 
   PYTHONPATH=src python examples/ssd_design_space.py
+  PYTHONPATH=src python examples/ssd_design_space.py --trace mytrace.csv
+
+``--trace`` replays a *real* trace (MSR-Cambridge or blktrace-style CSV)
+instead of the synthetic Table-2 workloads: the file is ingested through
+``repro.workloads`` (streamed parse, address compaction), characterized
+against the paper's Table-2 statistics, registered for replay-by-name, and
+swept through the same pipeline — cache, planner, metrics — as any
+built-in workload.
 """
+import argparse
 import time
 
 from repro.ssd import perf_optimized
 from repro.ssd.bench import geomean, run_workload
 
-WORKLOADS = ["proj_3", "src2_1"]
 DESIGNS = ("baseline", "nossd", "venice_minimal", "venice_hold",
            "venice_kscout", "venice", "ideal")
 
-print(f"{'mesh':8s} " + " ".join(f"{d:>14s}" for d in DESIGNS))
-for (rows, cols) in ((4, 16), (8, 8), (16, 4)):
-    cfg = perf_optimized(rows=rows, cols=cols)
-    gm = {d: [] for d in DESIGNS}
-    t0 = time.time()
-    for wl in WORKLOADS:
-        run = run_workload(wl, cfg, designs=DESIGNS, n_requests=1500)
-        for d in DESIGNS:
-            gm[d].append(run.speedup(d))
-    print(f"{rows}x{cols:<6d} "
-          + " ".join(f"{geomean(gm[d]):13.2f}x" for d in DESIGNS)
-          + f"   ({time.time()-t0:.0f}s)")
-print("\nvenice_minimal = Algorithm 1 without misrouting (adaptivity ablation)")
-print("venice_hold    = circuit held across tR (link-hours ablation)")
-print("venice_kscout  = 3 scouts race, fewest-hop success wins (beyond-paper)")
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="replay a real trace CSV (MSR or blktrace-style) "
+                         "instead of the synthetic workloads")
+    ap.add_argument("--n-req", type=int, default=1500)
+    args = ap.parse_args()
+
+    if args.trace:
+        from repro.workloads import characterize, load_trace, register_trace
+
+        trace = load_trace(args.trace)
+        prof = characterize(trace)
+        print(f"ingested {prof.name}: {prof.n_requests} requests, "
+              f"{prof.footprint_bytes >> 20} MB footprint (compacted)")
+        print(f"  Table-2 stats: read {prof.stats.read_pct:.0f}%, "
+              f"avg {prof.stats.avg_kb:.1f} KB, "
+              f"IAT {prof.stats.avg_iat_us:.1f} us; "
+              f"seq {prof.seq_frac:.2f}, hot {prof.hot_frac:.2f}, "
+              f"IAT CV {prof.iat_cv:.1f}")
+        register_trace(trace["name"], trace)  # already parsed + compacted
+        workloads = [trace["name"]]
+        n_req = min(args.n_req, prof.n_requests)
+    else:
+        workloads = ["proj_3", "src2_1"]
+        n_req = args.n_req
+
+    print(f"{'mesh':8s} " + " ".join(f"{d:>14s}" for d in DESIGNS))
+    for (rows, cols) in ((4, 16), (8, 8), (16, 4)):
+        cfg = perf_optimized(rows=rows, cols=cols)
+        gm = {d: [] for d in DESIGNS}
+        t0 = time.time()
+        for wl in workloads:
+            run = run_workload(wl, cfg, designs=DESIGNS, n_requests=n_req)
+            for d in DESIGNS:
+                gm[d].append(run.speedup(d))
+        print(f"{rows}x{cols:<6d} "
+              + " ".join(f"{geomean(gm[d]):13.2f}x" for d in DESIGNS)
+              + f"   ({time.time()-t0:.0f}s)")
+    print("\nvenice_minimal = Algorithm 1 without misrouting (adaptivity ablation)")
+    print("venice_hold    = circuit held across tR (link-hours ablation)")
+    print("venice_kscout  = 3 scouts race, fewest-hop success wins (beyond-paper)")
+
+
+if __name__ == "__main__":
+    main()

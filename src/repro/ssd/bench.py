@@ -56,6 +56,19 @@ def accelerate(trace, cfg: SSDConfig, target_util: float = 1.5) -> tuple:
     return trace, factor
 
 
+def record_accel(name: str, cfg: SSDConfig, factor: float, offered: float,
+                 target_util: float | None) -> None:
+    """Audit one (possibly) accelerated replay in ``PERF["accel"]`` —
+    the scale factor and the offered utilization before/after scaling
+    (exported verbatim into BENCH_*.json's ``accel`` key)."""
+    PERF["accel"][f"{name}/{cfg.name}"] = {
+        "factor": round(factor, 4),
+        "offered_util": round(offered, 5),
+        "offered_util_replayed": round(offered * factor, 5),
+        "target_util": target_util,
+    }
+
+
 # Per-process perf accounting: wall-clock split between the FTL front end
 # (trace → transactions) and the jitted sweep, plus cache telemetry and the
 # sweep planner's execution counters — lanes dispatched, trimmed-vs-valid
@@ -71,6 +84,11 @@ PERF: dict = {
     "lanes": 0, "scan_steps_valid": 0, "scan_steps_padded": 0,
     "devices_used": 0, "compile_s": 0.0, "exec_s": 0.0,
     "groups": [],
+    # per-(workload, config) accelerated-replay audit trail: the
+    # ``accelerate()`` scale factor and the offered utilization before/after
+    # scaling (satellite: the factor used to be computed and dropped by
+    # ``run_workload`` callers, leaving replays unauditable).
+    "accel": {},
 }
 
 # The FTL engine the harness decomposes with ("auto" | "vector" | "scalar");
@@ -130,6 +148,11 @@ def _trace_digest(pages: Dict[str, np.ndarray]) -> bytes:
     h = hashlib.sha1()
     for k in ("arrival_us", "is_read", "offset_page", "n_pages"):
         h.update(np.ascontiguousarray(pages[k]).tobytes())
+    if "tenant" in pages:  # attribution rides on the cached Transactions:
+        # same arrays + different tags must not share an entry (the tagged
+        # and untagged decompositions are bit-identical otherwise)
+        h.update(b"tenant")
+        h.update(np.ascontiguousarray(pages["tenant"]).tobytes())
     return h.digest()
 
 

@@ -34,7 +34,15 @@ KIND_READ, KIND_WRITE, KIND_ERASE = 0, 1, 2
 
 
 class Transactions(dict):
-    """dict of numpy arrays: arrival(ticks), kind, plane, node, row, nbytes, req."""
+    """dict of numpy arrays: arrival(ticks), kind, plane, node, row, nbytes, req.
+
+    Carries side metadata as attributes (``ftl``, ``n_requests``, and — for
+    multi-tenant traces — ``tenant_of_req``/``tenant_names``, the
+    per-request tenant attribution threaded through to
+    :class:`repro.ssd.sim.SimResult`).  Attribution is pure metadata: it
+    never reaches the scan, so tagged and untagged decompositions of the
+    same trace simulate bit-identically.
+    """
 
 
 def stripe_plane(cfg: SSDConfig, idx):
@@ -296,13 +304,13 @@ def decompose_trace(
     if engine != "scalar" and precondition:
         from repro.ssd.ftl_engine import decompose_vectorized
 
-        return decompose_vectorized(
+        return _attach_tenants(decompose_vectorized(
             cfg,
             trace,
             footprint_pages,
             overprovision=overprovision,
             seed=seed,
-        )
+        ), trace)
     ftl = FTL(cfg, n_lpns=footprint_pages, overprovision=overprovision)
     if precondition:
         # map the whole footprint so reads always hit a valid physical page.
@@ -338,4 +346,18 @@ def decompose_trace(
                     rows.append((tg, kind, pl, nb, -1))
 
     arr = np.asarray(rows, dtype=np.int64)
-    return to_transactions(cfg, arr, ftl, int(len(arrival)))
+    return _attach_tenants(
+        to_transactions(cfg, arr, ftl, int(len(arrival))), trace
+    )
+
+
+def _attach_tenants(txns: Transactions, trace: Dict) -> Transactions:
+    """Thread per-request tenant attribution (if the trace carries any)."""
+    tenant = trace.get("tenant")
+    if tenant is not None:
+        txns.tenant_of_req = np.asarray(tenant, np.int32)
+        txns.tenant_names = tuple(trace.get(
+            "tenant_names",
+            [str(t) for t in range(int(txns.tenant_of_req.max()) + 1)],
+        ))
+    return txns

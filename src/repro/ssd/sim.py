@@ -736,6 +736,9 @@ class SimResult(NamedTuple):
     flash_energy_j: float
     transfer_energy_j: float
     static_energy_j: float
+    # --- host-request surface (aligned with req_latency, request order) ---
+    req_completion: np.ndarray | None = None  # ticks, max over request's txns
+    req_tenant: np.ndarray | None = None  # tenant id per request, or None
 
     @property
     def exec_s(self) -> float:
@@ -753,12 +756,28 @@ class SimResult(NamedTuple):
         n = len(self.req_latency) if n_requests is None else n_requests
         return n / max(self.exec_s, 1e-12)
 
+    def latency_percentiles_us(self, qs=(50, 95, 99)) -> dict:
+        """Host-request latency percentiles, us (GC excluded)."""
+        if len(self.req_latency) == 0:
+            return {f"p{q:g}": 0.0 for q in qs}
+        v = np.percentile(self.req_latency, qs) * (TICK_NS * 1e-3)
+        return {f"p{q:g}": float(x) for q, x in zip(qs, v)}
+
     def p99_latency_us(self) -> float:
         return float(np.percentile(self.req_latency, 99)) * TICK_NS * 1e-3
 
     def latency_cdf_us(self):
         lat = np.sort(self.req_latency) * (TICK_NS * 1e-3)
         return lat, np.arange(1, len(lat) + 1) / len(lat)
+
+    def tenant_latencies(self) -> dict:
+        """Per-tenant host-request latency arrays (ticks).  The concatenation
+        over tenants is a permutation of ``req_latency`` — per-tenant
+        metrics merge back to the untagged aggregate bit-exactly."""
+        if self.req_tenant is None:
+            return {0: self.req_latency}
+        return {int(t): self.req_latency[self.req_tenant == t]
+                for t in np.unique(self.req_tenant)}
 
     def conflict_rate(self) -> float:
         return float(np.mean(self.conflict))
@@ -915,6 +934,11 @@ def _finish_result(cfg: SSDConfig, design: str, txns, order,
     np.minimum.at(req_arr, req[host], arrival[host].astype(np.int64))
     seen = req_arr < np.iinfo(np.int64).max
     req_latency = (req_done - req_arr)[seen]
+    req_completion = req_done[seen]
+    tenant = getattr(txns, "tenant_of_req", None)
+    req_tenant = None
+    if tenant is not None and len(tenant) >= n_req:
+        req_tenant = np.asarray(tenant, np.int32)[:n_req][seen]
 
     pm = cfg.power
     tick_s = TICK_NS * 1e-9
@@ -949,6 +973,8 @@ def _finish_result(cfg: SSDConfig, design: str, txns, order,
         flash_energy_j=flash_energy,
         transfer_energy_j=float(transfer_energy),
         static_energy_j=float(static_energy),
+        req_completion=req_completion,
+        req_tenant=req_tenant,
     )
 
 

@@ -326,8 +326,10 @@ def execute_requests(requests: Sequence[RunRequest]) -> list:
         n_req = rq.n_requests or default_n_requests(rq.name)
         trace = trace_for(rq.name, n_req, rq.seed)
         accel = 1.0
+        offered = bench.offered_utilization(trace, rq.cfg)
         if rq.target_util is not None:
             trace, accel = bench.accelerate(trace, rq.cfg, rq.target_util)
+        bench.record_accel(rq.name, rq.cfg, accel, offered, rq.target_util)
         pages = to_pages(trace, rq.cfg.page_bytes)
         t0 = time.perf_counter()
         txns = bench.decompose_cached(rq.cfg, pages,

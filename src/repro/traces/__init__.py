@@ -1,10 +1,17 @@
 """Synthetic I/O trace generation calibrated to the paper's Table 2/3."""
 from repro.traces.generator import (
+    CUSTOM_TRACES,
     MIXES,
     WORKLOADS,
+    WorkloadStats,
     gen_trace,
     mix_traces,
+    overlay_traces,
+    register_trace,
     trace_for,
 )
 
-__all__ = ["MIXES", "WORKLOADS", "gen_trace", "mix_traces", "trace_for"]
+__all__ = [
+    "CUSTOM_TRACES", "MIXES", "WORKLOADS", "WorkloadStats", "gen_trace",
+    "mix_traces", "overlay_traces", "register_trace", "trace_for",
+]

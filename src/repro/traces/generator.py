@@ -12,32 +12,48 @@ converge to the table's targets.
 from __future__ import annotations
 
 import zlib
-from typing import Dict
+from typing import Dict, NamedTuple
 
 import numpy as np
 
-# name -> (read %, avg request size KB, avg inter-request arrival time us)
-# verbatim from Table 2
-WORKLOADS: Dict[str, tuple] = {
-    "hm_0": (36, 8.8, 58),
-    "mds_0": (12, 9.6, 268),
-    "proj_3": (95, 9.6, 19),
-    "prxy_0": (3, 7.2, 242),
-    "rsrch_0": (9, 9.6, 129),
-    "src1_0": (56, 43.2, 49),
-    "src2_1": (98, 59.2, 50),
-    "usr_0": (40, 22.8, 98),
-    "wdev_0": (20, 9.2, 162),
-    "web_1": (54, 29.6, 67),
-    "YCSB_B": (99, 65.7, 13),
-    "YCSB_D": (99, 62, 14),
-    "jenkins": (94, 33.4, 615),
-    "postgres": (82, 13.3, 382),
-    "LUN0": (76, 20.4, 218),
-    "LUN2": (73, 16, 320),
-    "LUN3": (7, 7.7, 3127),
-    "ssd-00": (91, 90, 5),
-    "ssd-10": (99, 11.5, 2),
+
+class WorkloadStats(NamedTuple):
+    """The Table-2 summary triple every synthetic workload is calibrated to.
+
+    The same structure is produced by the workload characterizer
+    (``repro.workloads.characterize``) when it re-fits the generator to an
+    *ingested real* trace, so registry entries and measured workloads are
+    interchangeable everywhere a stats triple is accepted.  A plain
+    NamedTuple keeps the historical tuple protocol (unpacking, ``[2]``)
+    working for existing callers.
+    """
+
+    read_pct: float  # % of requests that are reads
+    avg_kb: float  # mean request size, KB
+    avg_iat_us: float  # mean inter-request arrival time, us
+
+
+# name -> WorkloadStats, verbatim from Table 2
+WORKLOADS: Dict[str, WorkloadStats] = {
+    "hm_0": WorkloadStats(36, 8.8, 58),
+    "mds_0": WorkloadStats(12, 9.6, 268),
+    "proj_3": WorkloadStats(95, 9.6, 19),
+    "prxy_0": WorkloadStats(3, 7.2, 242),
+    "rsrch_0": WorkloadStats(9, 9.6, 129),
+    "src1_0": WorkloadStats(56, 43.2, 49),
+    "src2_1": WorkloadStats(98, 59.2, 50),
+    "usr_0": WorkloadStats(40, 22.8, 98),
+    "wdev_0": WorkloadStats(20, 9.2, 162),
+    "web_1": WorkloadStats(54, 29.6, 67),
+    "YCSB_B": WorkloadStats(99, 65.7, 13),
+    "YCSB_D": WorkloadStats(99, 62, 14),
+    "jenkins": WorkloadStats(94, 33.4, 615),
+    "postgres": WorkloadStats(82, 13.3, 382),
+    "LUN0": WorkloadStats(76, 20.4, 218),
+    "LUN2": WorkloadStats(73, 16, 320),
+    "LUN3": WorkloadStats(7, 7.7, 3127),
+    "ssd-00": WorkloadStats(91, 90, 5),
+    "ssd-10": WorkloadStats(99, 11.5, 2),
 }
 
 # Table 3: mix name -> constituent workloads
@@ -51,6 +67,47 @@ MIXES: Dict[str, tuple] = {
 }
 
 _ALIGN = 4096  # requests are 4KB-aligned multiples (block-device granularity)
+
+# Ingested *real* traces registered for replay-by-name (populated by
+# ``repro.workloads.register_trace``): ``trace_for`` serves a registered
+# name by slicing the literal trace, so the whole bench/cache/planner
+# pipeline treats a real workload exactly like a synthetic one.
+CUSTOM_TRACES: Dict[str, Dict[str, np.ndarray]] = {}
+
+
+# Simulator time is int32 ticks of 10 ns (repro.ssd.config.TICK_NS):
+# arrivals beyond ~21 s would wrap negative in the transaction arrays.
+# Synthetic traces are clamped to this budget by default_n_requests; an
+# ingested real trace must be sliced or rescaled before registration.
+_MAX_SPAN_US = (2**31 - 1) * 10e-3  # ≈ 21.47 s
+
+
+def register_trace(name: str, trace: Dict[str, np.ndarray]) -> None:
+    """Register an ingested trace (canonical byte-trace dict) for replay."""
+    for key in ("arrival_us", "is_read", "offset_bytes", "size_bytes"):
+        if key not in trace:
+            raise ValueError(f"trace missing field {key!r}")
+    arr = np.asarray(trace["arrival_us"], np.float64)
+    span = float(arr[-1] - arr[0]) if len(arr) else 0.0
+    if span > _MAX_SPAN_US:
+        raise ValueError(
+            f"trace {name!r} spans {span/1e6:.1f} s of arrivals — beyond "
+            f"the simulator's int32 tick budget ({_MAX_SPAN_US/1e6:.1f} s). "
+            "Slice the trace or rescale its arrivals before registering."
+        )
+    CUSTOM_TRACES[name] = dict(trace, name=name)
+
+
+def _slice_trace(trace: Dict[str, np.ndarray], n: int | None):
+    full = len(trace["arrival_us"])
+    if n is None or n >= full:
+        return dict(trace)
+    out = dict(trace)
+    for k in ("arrival_us", "is_read", "offset_bytes", "size_bytes",
+              "tenant"):
+        if k in out:
+            out[k] = out[k][:n]
+    return out
 
 
 def _seq_stream_offsets(
@@ -113,6 +170,7 @@ def gen_trace(
     burst_speed: float = 64.0,
     seq_frac: float = 0.5,
     n_streams: int = 8,
+    stats: WorkloadStats | None = None,
 ) -> Dict[str, np.ndarray]:
     """Generate one synthetic trace in *byte* units (page-size agnostic).
 
@@ -120,8 +178,14 @@ def gen_trace(
     originals): bursts of ~``burst_mean`` requests arrive ``burst_speed``×
     faster than the mean rate, separated by long gaps; the *overall mean*
     inter-arrival time equals Table 2's value exactly in expectation.
+
+    ``stats`` overrides the Table-2 registry lookup — a characterized real
+    workload (``repro.workloads.characterize``) generates through the same
+    path as every registered name.
     """
-    read_pct, avg_kb, avg_iat_us = WORKLOADS[name]
+    read_pct, avg_kb, avg_iat_us = (
+        stats if stats is not None else WORKLOADS[name]
+    )
     rs = np.random.RandomState((zlib.crc32(name.encode()) & 0x7FFFFFFF) ^ seed)
 
     # arrivals: ON/OFF bursts with exact mean IAT
@@ -184,20 +248,48 @@ def gen_trace(
 def mix_traces(name: str, n_requests_each: int, seed: int = 0) -> Dict[str, np.ndarray]:
     """Table 3 mixes: overlay constituents on a shared timeline with disjoint
     address ranges (separate tenants hitting one SSD).  Request counts are
-    scaled per constituent so all spans align (faster tenants issue more)."""
-    names = MIXES[name]
-    span = n_requests_each * min(WORKLOADS[w][2] for w in names)
-    parts = [
-        gen_trace(w, max(50, int(span / WORKLOADS[w][2])), seed + i)
-        for i, w in enumerate(names)
-    ]
+    scaled per constituent so all spans align (faster tenants issue more).
+
+    Emits per-request tenant attribution (``tenant`` = constituent index,
+    ``tenant_names``) — pure metadata riding along the arrays: stripping
+    the two keys yields the bit-identical untagged single-tenant trace.
+
+    Constituents may be Table-2 workloads OR registered real traces
+    (``CUSTOM_TRACES``): a registered name contributes a slice of its
+    literal trace, scaled by its measured mean IAT like any synthetic
+    tenant.
+    """
+    names = MIXES.get(name, None)
+    if names is None:  # ad-hoc mixes: "a+b" tenant lists beyond Table 3
+        names = tuple(name.split("+"))
+
+    def iat_of(w):
+        if w in CUSTOM_TRACES:
+            a = np.asarray(CUSTOM_TRACES[w]["arrival_us"], np.float64)
+            return max(float(np.diff(a, prepend=0.0).mean()), 1e-9)
+        return WORKLOADS[w][2]
+
+    span = n_requests_each * min(iat_of(w) for w in names)
+    parts = []
+    for i, w in enumerate(names):
+        cnt = max(50, int(span / iat_of(w)))
+        if w in CUSTOM_TRACES:
+            parts.append(_slice_trace(CUSTOM_TRACES[w], cnt))
+        else:
+            parts.append(gen_trace(w, cnt, seed + i))
+    return overlay_traces(name, names, parts)
+
+
+def overlay_traces(name: str, tenant_names, parts) -> Dict[str, np.ndarray]:
+    """Overlay per-tenant byte traces on one timeline, disjoint addresses."""
     base = 0
-    arrs, reads, offs, sizes = [], [], [], []
-    for p in parts:
+    arrs, reads, offs, sizes, tens = [], [], [], [], []
+    for t, p in enumerate(parts):
         arrs.append(p["arrival_us"])
         reads.append(p["is_read"])
         offs.append(p["offset_bytes"] + base)
         sizes.append(p["size_bytes"])
+        tens.append(np.full(len(p["arrival_us"]), t, dtype=np.int32))
         base += p["footprint_bytes"]
     arrival = np.concatenate(arrs)
     order = np.argsort(arrival, kind="stable")
@@ -208,6 +300,8 @@ def mix_traces(name: str, n_requests_each: int, seed: int = 0) -> Dict[str, np.n
         "offset_bytes": np.concatenate(offs)[order],
         "size_bytes": np.concatenate(sizes)[order],
         "footprint_bytes": base,
+        "tenant": np.concatenate(tens)[order],
+        "tenant_names": tuple(tenant_names),
     }
 
 
@@ -215,17 +309,26 @@ def to_pages(trace: Dict[str, np.ndarray], page_bytes: int) -> Dict[str, np.ndar
     """Convert a byte trace to page units for a given SSD config."""
     off = trace["offset_bytes"] // page_bytes
     last = (trace["offset_bytes"] + trace["size_bytes"] + page_bytes - 1) // page_bytes
-    return {
+    pages = {
         "arrival_us": trace["arrival_us"],
         "is_read": trace["is_read"],
         "offset_page": off.astype(np.int64),
         "n_pages": np.maximum(1, last - off).astype(np.int64),
         "footprint_pages": max(1, trace["footprint_bytes"] // page_bytes),
     }
+    if "tenant" in trace:  # per-request attribution rides along untouched
+        pages["tenant"] = np.asarray(trace["tenant"], np.int32)
+        pages["tenant_names"] = tuple(trace.get(
+            "tenant_names", [str(t) for t in
+                             range(int(pages["tenant"].max()) + 1)]
+        ))
+    return pages
 
 
 def trace_for(name: str, n_requests: int, seed: int = 0):
-    """Workload or mix by name."""
+    """Workload, mix, or registered real trace by name."""
+    if name in CUSTOM_TRACES:
+        return _slice_trace(CUSTOM_TRACES[name], n_requests)
     if name in MIXES:
         per = max(1, n_requests // len(MIXES[name]))
         return mix_traces(name, per, seed)
@@ -235,6 +338,8 @@ def trace_for(name: str, n_requests: int, seed: int = 0):
 def default_n_requests(name: str, target_span_us: float = 300_000.0) -> int:
     """Pick a request count so every trace spans a comparable wall-clock
     window (sparse traces need fewer requests; int32 tick budget)."""
+    if name in CUSTOM_TRACES:
+        return len(CUSTOM_TRACES[name]["arrival_us"])
     if name in MIXES:
         iat = min(WORKLOADS[w][2] for w in MIXES[name]) / len(MIXES[name])
     else:

@@ -1,0 +1,50 @@
+"""Workloads subsystem: real-trace ingestion, workload characterization, and
+the declarative QoS scenario engine.
+
+Three layers (DESIGN.md §6):
+
+* **Ingestion** (``repro.workloads.ingest``): streamed, memory-bounded
+  parsers for MSR-Cambridge CSV and generic blktrace-style CSV, address
+  compaction, and ``register_trace`` so an ingested real trace replays
+  by name through the whole bench/cache/planner pipeline.
+* **Characterization** (``repro.workloads.characterize``): extracts the
+  Table-2-style statistics (read ratio, size/IAT distributions, footprint,
+  sequentiality) from any trace as a :class:`WorkloadProfile` whose core is
+  the same :class:`repro.traces.WorkloadStats` the synthetic generator is
+  calibrated to — so the generator can be re-fit to arbitrary real
+  workloads (``register_workload``).
+* **Scenario engine** (``repro.workloads.scenario``): declarative
+  :class:`QueueDepthSweep` / :class:`MultiTenantMix` / :class:`BurstScale`
+  specs that lower onto ``repro.ssd.sweep_plan.execute_sim_runs`` — the
+  multi-core planner pools their lanes like any other run — and emit the
+  tail-latency / fairness surface (per-design p50/p95/p99, per-tenant
+  slowdown-vs-solo, max/min fairness).
+"""
+from repro.traces.generator import WorkloadStats, register_trace
+
+from repro.workloads.characterize import (
+    WorkloadProfile,
+    characterize,
+    register_workload,
+)
+from repro.workloads.ingest import (
+    compact_footprint,
+    ingest_file,
+    iter_trace_csv,
+    load_trace,
+    sniff_format,
+    write_msr_csv,
+)
+from repro.workloads.scenario import (
+    BurstScale,
+    MultiTenantMix,
+    QueueDepthSweep,
+    run_scenario,
+)
+
+__all__ = [
+    "WorkloadStats", "WorkloadProfile", "characterize", "register_workload",
+    "register_trace", "compact_footprint", "ingest_file", "iter_trace_csv",
+    "load_trace", "sniff_format", "write_msr_csv", "BurstScale",
+    "MultiTenantMix", "QueueDepthSweep", "run_scenario",
+]

@@ -1,0 +1,256 @@
+"""Streamed, memory-bounded ingestion of real storage traces.
+
+Two wire formats are understood:
+
+* **MSR-Cambridge CSV** (the paper's primary suite): positional columns
+  ``Timestamp,Hostname,DiskNumber,Type,Offset,Size,ResponseTime`` with the
+  timestamp in Windows FILETIME units (100 ns ticks) and ``Type`` one of
+  ``Read``/``Write``.
+* **blktrace-style CSV**: ``time,op,offset,size`` where ``time`` is seconds
+  (float), ``op`` contains ``R`` or ``W`` (blkparse RWBS convention — e.g.
+  ``R``, ``WS``, ``RA``), ``offset`` is the start *sector* (512 B) and
+  ``size`` the sector count.
+
+Both parse to the canonical byte-trace dict the rest of the repo consumes
+(``arrival_us`` f64 starting at 0, ``is_read`` bool, ``offset_bytes`` /
+``size_bytes`` int64, ``footprint_bytes``) — the same schema
+``repro.traces.generator.gen_trace`` emits, so an ingested trace drops into
+``to_pages`` → FTL → sweep unchanged.
+
+Parsing is **streamed**: :func:`iter_trace_csv` reads line-by-line and
+yields fixed-size numpy batches, holding at most ``batch_requests`` rows in
+Python lists at any time, so week-long multi-GB traces ingest in bounded
+memory.  :func:`load_trace` is the whole-file convenience built on the same
+row parser; the two paths are pinned identical on the bundled fixture by
+``tests/test_workloads.py``.
+
+Real traces address a whole LUN (offsets up to hundreds of GB) while the
+simulator's FTL allocates physical pages for the entire footprint, so
+:func:`compact_footprint` remaps the sparse touched address set onto a
+dense range by merging touched extents: page-adjacency *within* an extent
+(the sequentiality that matters to striping and channel skew) is preserved,
+untouched gaps between extents are dropped.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Iterator
+
+import numpy as np
+
+from repro.traces.generator import register_trace
+
+__all__ = [
+    "sniff_format", "iter_trace_csv", "load_trace", "compact_footprint",
+    "write_msr_csv", "ingest_file",
+]
+
+_FILETIME_PER_US = 10.0  # Windows FILETIME = 100 ns ticks
+_SECTOR = 512
+
+
+def _parse_rows_msr(rows: list, base: int | None) -> tuple:
+    """Columns (ts_us, is_read, offset, size, base) from split MSR fields.
+
+    FILETIME values (~1.3e17) exceed float64's exact-integer range, so the
+    timestamp is rebased to the file's FIRST row in int64 arithmetic before
+    the float conversion — a week-long trace spans ≪ 2^53 after rebasing.
+    """
+    ticks = np.array([int(r[0]) for r in rows], np.int64)
+    if base is None:
+        base = int(ticks[0])
+    ts = (ticks - base) / _FILETIME_PER_US
+    is_read = np.array([r[3].strip().lower().startswith("r") for r in rows],
+                       bool)
+    off = np.array([int(r[4]) for r in rows], np.int64)
+    size = np.array([int(r[5]) for r in rows], np.int64)
+    return ts, is_read, off, size, base
+
+
+def _parse_rows_blk(rows: list, base: int | None) -> tuple:
+    ts = np.array([float(r[0]) for r in rows], np.float64) * 1e6  # s -> us
+    is_read = np.array(["r" in r[1].strip().lower() for r in rows], bool)
+    off = np.array([int(r[2]) for r in rows], np.int64) * _SECTOR
+    size = np.array([int(r[3]) for r in rows], np.int64) * _SECTOR
+    return ts, is_read, off, size, base
+
+
+_PARSERS = {"msr": _parse_rows_msr, "blktrace": _parse_rows_blk}
+
+
+def _is_header(line: str) -> bool:
+    first = line.split(",", 1)[0].strip()
+    try:
+        float(first)
+        return False
+    except ValueError:
+        return True
+
+
+def sniff_format(path: str) -> str:
+    """``"msr"`` or ``"blktrace"`` from the first data line's shape."""
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or _is_header(line):
+                continue
+            fields = line.split(",")
+            if len(fields) >= 6 and fields[3].strip().lower() in (
+                    "read", "write"):
+                return "msr"
+            if len(fields) >= 4:
+                return "blktrace"
+            break
+    raise ValueError(f"cannot sniff trace format of {path}")
+
+
+def iter_trace_csv(
+    path: str, fmt: str = "auto", batch_requests: int = 65536
+) -> Iterator[Dict[str, np.ndarray]]:
+    """Stream a trace CSV as numpy batches of ≤ ``batch_requests`` rows.
+
+    Each batch is a dict with raw (un-normalized) columns ``arrival_us``
+    (rebased to the file's first data row), ``is_read``, ``offset_bytes``,
+    ``size_bytes``.  Malformed lines are skipped.  Memory is bounded by the
+    batch size — the file is never read whole.
+    """
+    if fmt == "auto":
+        fmt = sniff_format(path)
+    parse = _PARSERS[fmt]
+    min_fields = 6 if fmt == "msr" else 4
+    base = None
+
+    def flush(rows):
+        nonlocal base
+        ts, is_read, off, size, base = parse(rows, base)
+        return {"arrival_us": ts, "is_read": is_read,
+                "offset_bytes": off, "size_bytes": size}
+
+    rows: list = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or _is_header(line):
+                continue
+            fields = line.split(",")
+            if len(fields) < min_fields:
+                continue
+            rows.append(fields)
+            if len(rows) >= batch_requests:
+                yield flush(rows)
+                rows = []
+    if rows:
+        yield flush(rows)
+
+
+def _normalize(batches: list, name: str) -> Dict[str, np.ndarray]:
+    """Concatenate raw batches into the canonical byte-trace dict."""
+    if not batches:
+        raise ValueError(f"trace {name!r} has no parseable requests")
+    ts = np.concatenate([b["arrival_us"] for b in batches])
+    is_read = np.concatenate([b["is_read"] for b in batches])
+    off = np.concatenate([b["offset_bytes"] for b in batches])
+    size = np.maximum(1, np.concatenate([b["size_bytes"] for b in batches]))
+    order = np.argsort(ts, kind="stable")  # some traces log out of order
+    ts, is_read, off, size = ts[order], is_read[order], off[order], size[order]
+    end = int((off + size).max())
+    return {
+        "name": name,
+        "arrival_us": ts - ts[0],
+        "is_read": is_read,
+        "offset_bytes": off,
+        "size_bytes": size,
+        "footprint_bytes": end,
+    }
+
+
+def load_trace(
+    path: str,
+    fmt: str = "auto",
+    name: str | None = None,
+    compact: bool = True,
+    batch_requests: int | None = None,
+) -> Dict[str, np.ndarray]:
+    """Parse a whole trace file to the canonical byte-trace dict.
+
+    ``batch_requests=None`` parses the file in one pass (whole-file path);
+    any integer routes through the streamed iterator — both are pinned
+    identical by the test suite.  ``compact=True`` remaps the sparse LUN
+    address space onto a dense footprint (:func:`compact_footprint`).
+    """
+    if fmt == "auto":
+        fmt = sniff_format(path)
+    if name is None:
+        name = os.path.splitext(os.path.basename(path))[0]
+    if batch_requests is None:
+        batch_requests = 1 << 62  # one flush == whole file
+    batches = list(iter_trace_csv(path, fmt, batch_requests))
+    trace = _normalize(batches, name)
+    if compact:
+        trace = compact_footprint(trace)
+    return trace
+
+
+def compact_footprint(
+    trace: Dict[str, np.ndarray], align: int = 4096
+) -> Dict[str, np.ndarray]:
+    """Remap the touched address set onto a dense footprint.
+
+    Touched byte ranges are rounded out to ``align`` boundaries and merged
+    into maximal extents; each extent is then packed back-to-back.  The
+    remap is monotone and gap-free inside an extent, so sequential runs,
+    overlaps and re-references — everything the FTL's striping and the
+    channel-skew analysis care about — are preserved; only never-touched
+    gaps are dropped.  Offsets keep their intra-page byte remainder.
+    """
+    off = np.asarray(trace["offset_bytes"], np.int64)
+    size = np.asarray(trace["size_bytes"], np.int64)
+    s = off // align
+    e = (off + size + align - 1) // align  # exclusive, align units
+    order = np.argsort(s, kind="stable")
+    s_s, e_s = s[order], e[order]
+    # merged extents: a new extent starts where the running max end < start
+    run_end = np.maximum.accumulate(e_s)
+    new_ext = np.concatenate(([True], s_s[1:] > run_end[:-1]))
+    ext_start = s_s[new_ext]
+    ext_id = np.cumsum(new_ext) - 1
+    # extent end = running max at the last member of each extent
+    last = np.concatenate((np.flatnonzero(new_ext)[1:] - 1, [len(s_s) - 1]))
+    ext_end = run_end[last]
+    ext_len = ext_end - ext_start
+    ext_base = np.concatenate(([0], np.cumsum(ext_len)[:-1]))
+    # map each request through its extent
+    req_ext = np.empty(len(off), np.int64)
+    req_ext[order] = ext_id
+    new_off = (ext_base[req_ext] + (s - ext_start[req_ext])) * align \
+        + (np.asarray(trace["offset_bytes"], np.int64) % align)
+    out = dict(trace)
+    out["offset_bytes"] = new_off
+    out["footprint_bytes"] = int(ext_len.sum()) * align
+    return out
+
+
+def write_msr_csv(trace: Dict[str, np.ndarray], path: str,
+                  hostname: str = "anon") -> None:
+    """Serialize a canonical byte trace as MSR-Cambridge CSV (the format
+    :func:`load_trace` parses) — used to build anonymized test fixtures."""
+    base_ft = 129_000_000_000_000_000  # arbitrary FILETIME epoch offset
+    # ticks first, THEN the epoch offset, all in int64: FILETIME magnitudes
+    # exceed float64's exact-integer range (ulp 16 at 1.3e17)
+    ts = np.round(
+        np.asarray(trace["arrival_us"], np.float64) * _FILETIME_PER_US
+    ).astype(np.int64) + base_ft
+    with open(path, "w") as f:
+        for t, r, o, s in zip(ts, trace["is_read"], trace["offset_bytes"],
+                              trace["size_bytes"]):
+            typ = "Read" if r else "Write"
+            f.write(f"{t},{hostname},0,{typ},{int(o)},{int(s)},0\n")
+
+
+def ingest_file(path: str, fmt: str = "auto", name: str | None = None,
+                compact: bool = True) -> str:
+    """Load + register a trace for replay-by-name; returns the name under
+    which ``bench.run_workload`` / the scenario engine can now replay it."""
+    trace = load_trace(path, fmt=fmt, name=name, compact=compact)
+    register_trace(trace["name"], trace)
+    return trace["name"]

@@ -1,0 +1,325 @@
+"""Declarative QoS scenarios lowered onto the sweep planner.
+
+The repo's figure phases replay *open-loop* accelerated traces and report
+mean throughput; this module adds the complementary QoS surface — the one
+Sprinkler/PALP argue conflict-resolution mechanisms must be evaluated on:
+
+* :class:`QueueDepthSweep` — **closed-loop** depth sweeps (QD 1→64).  A
+  closed-loop submitter keeps exactly QD requests outstanding: request
+  ``k`` is issued when request ``k-QD`` completes.  The completion times
+  depend on the design being simulated, so the scenario iterates: start
+  from saturation (all requests at t=0), simulate, regenerate arrivals
+  from the previous round's per-request completion feedback
+  (``SimResult.req_completion``), and repeat ``iters`` times — each
+  (design, QD) converging to its own steady queue.  This is the standard
+  fixed-point approximation of a closed loop on a batch simulator; the
+  feedback identity is pinned by tests.
+* :class:`MultiTenantMix` — tenants overlaid on one timeline with disjoint
+  address ranges and per-request attribution threaded to
+  ``SimResult.req_tenant``.  Reports per-tenant p50/p95/p99, slowdown
+  versus the tenant running *solo* (same arrival schedule and addresses,
+  interfering tenants removed), and max/min fairness.
+* :class:`BurstScale` — open-loop burst stress: the same trace replayed at
+  increasing acceleration factors.
+
+Every scenario lowers to ``repro.ssd.sweep_plan.execute_sim_runs`` batches
+— one planner call per feedback round — so its lanes pool into the same
+sharded multi-core groups as any bench run, and every decomposition goes
+through ``bench.decompose_cached`` (the content-digest LRU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Sequence
+
+import numpy as np
+
+from repro.ssd import bench
+from repro.ssd.config import TICK_NS
+from repro.ssd.sim import SimResult
+from repro.traces.generator import (
+    MIXES,
+    default_n_requests,
+    mix_traces,
+    to_pages,
+    trace_for,
+)
+
+__all__ = [
+    "QueueDepthSweep", "MultiTenantMix", "BurstScale", "run_scenario",
+    "design_metrics", "closed_loop_arrivals",
+]
+
+DEFAULT_QDS = (1, 2, 4, 8, 16, 32, 64)
+
+
+@dataclasses.dataclass(frozen=True)
+class QueueDepthSweep:
+    """Closed-loop queue-depth sweep of one workload (QD 1→64).
+
+    ``iters`` is the number of completion-feedback rounds after the
+    saturation bootstrap.  Arrivals only ever move later round over round,
+    so the iteration converges to the true closed loop from the saturated
+    side — reported latencies are upper bounds that tighten with ``iters``
+    (shallow depths need the most rounds; ~6 is where the QD-1 tail
+    flattens on the full geometry, see EXPERIMENTS.md).  Each round's
+    residual is exported as ``arrival_drift_us``.
+    """
+
+    workload: str
+    qds: tuple = DEFAULT_QDS
+    n_requests: int | None = None
+    iters: int = 6
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiTenantMix:
+    """Tenant workloads overlaid on one device, attribution threaded."""
+
+    workloads: tuple  # constituent workload names (or one Table-3 mix name)
+    n_requests_each: int = 300
+    target_util: float | None = 1.5
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class BurstScale:
+    """Open-loop burst stress: arrival acceleration factor sweep."""
+
+    workload: str
+    factors: tuple = (1.0, 2.0, 4.0, 8.0)
+    n_requests: int | None = None
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# shared lowering helpers
+# ---------------------------------------------------------------------------
+
+
+def _decompose(cfg, trace):
+    """Trace → Transactions through the bench digest cache (PERF-timed)."""
+    pages = to_pages(trace, cfg.page_bytes)
+    t0 = time.perf_counter()
+    txns = bench.decompose_cached(cfg, pages, int(pages["footprint_pages"]))
+    bench.PERF["ftl_s"] += time.perf_counter() - t0
+    return txns
+
+
+def _simulate_batch(runs: list) -> list:
+    """One planner pass over many (cfg, txns, designs, seeds) runs."""
+    from repro.ssd.sweep_plan import execute_sim_runs
+
+    t0 = time.perf_counter()
+    out = execute_sim_runs(runs)
+    bench.PERF["sim_s"] += time.perf_counter() - t0
+    return out
+
+
+def design_metrics(res: SimResult, tenant_names: tuple = ()) -> Dict:
+    """JSON-ready tail-latency record of one lane (us; GC excluded)."""
+    scale = TICK_NS * 1e-3
+    lat = res.req_latency * scale
+    out = {
+        "n_requests": int(len(lat)),
+        "mean_us": round(float(lat.mean()), 3) if len(lat) else 0.0,
+        **{k + "_us": round(v, 3)
+           for k, v in res.latency_percentiles_us().items()},
+        "iops": round(res.iops(), 1),
+        "conflict_pct": round(res.conflict_rate() * 100, 3),
+    }
+    if res.req_tenant is not None:
+        tl = res.tenant_latencies()
+        out["tenants"] = {
+            (tenant_names[t] if t < len(tenant_names) else str(t)): {
+                "n_requests": int(len(v)),
+                "mean_us": round(float(v.mean() * scale), 3),
+                "p50_us": round(float(np.percentile(v, 50)) * scale, 3),
+                "p95_us": round(float(np.percentile(v, 95)) * scale, 3),
+                "p99_us": round(float(np.percentile(v, 99)) * scale, 3),
+            }
+            for t, v in tl.items() if len(v)
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# closed-loop queue-depth sweep
+# ---------------------------------------------------------------------------
+
+
+def closed_loop_arrivals(completion_ticks: np.ndarray, qd: int) -> np.ndarray:
+    """Arrivals (us) of the next feedback round: request ``k`` is issued
+    when request ``k-qd`` completed in the previous round.  The running max
+    keeps the FIFO submitter causal (a request is never issued before its
+    predecessor)."""
+    us = np.asarray(completion_ticks, np.float64) * (TICK_NS * 1e-3)
+    a = np.zeros(len(us), np.float64)
+    if 0 < qd < len(us):
+        a[qd:] = us[:-qd]
+    return np.maximum.accumulate(a)
+
+
+def run_queue_depth_sweep(cfg, scn: QueueDepthSweep,
+                          designs: Sequence[str]) -> Dict:
+    """Run the closed-loop QD sweep; returns the per-design QoS surface."""
+    designs = tuple(designs)
+    n_req = scn.n_requests or default_n_requests(scn.workload)
+    base = trace_for(scn.workload, n_req, scn.seed)
+    n = len(base["arrival_us"])
+    keys = [(d, q) for d in designs for q in scn.qds]
+    # saturation bootstrap: round 0 submits everything at t=0 (≡ QD = n);
+    # each feedback round then re-issues from the previous completions
+    arrivals = {k: np.zeros(n, np.float64) for k in keys}
+    results: Dict = {}
+    drift = {k: 0.0 for k in keys}
+    for _ in range(max(1, scn.iters)):
+        runs = []
+        for (d, q) in keys:
+            tr = dict(base)
+            tr["arrival_us"] = arrivals[(d, q)]
+            txns = _decompose(cfg, tr)
+            runs.append((cfg, txns, (d,), (scn.seed + 7,), "auto"))
+        out = _simulate_batch(runs)
+        for (d, q), res in zip(keys, out):
+            results[(d, q)] = res[0]
+            nxt = closed_loop_arrivals(results[(d, q)].req_completion, q)
+            drift[(d, q)] = float(np.abs(nxt - arrivals[(d, q)]).mean())
+            arrivals[(d, q)] = nxt
+    tenant_names = tuple(base.get("tenant_names", ()))
+
+    def metrics(d, q):
+        m = design_metrics(results[(d, q)], tenant_names)
+        # last round's mean arrival residual: how far from the fixed point
+        m["arrival_drift_us"] = round(drift[(d, q)], 2)
+        return m
+
+    return {
+        "scenario": "queue_depth_sweep",
+        "workload": scn.workload,
+        "n_requests": n,
+        "iters": scn.iters,
+        "qds": list(scn.qds),
+        "designs": {
+            d: {str(q): metrics(d, q) for q in scn.qds}
+            for d in designs
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant mix with slowdown-vs-solo fairness
+# ---------------------------------------------------------------------------
+
+
+def _tenant_filter(merged: Dict, t: int) -> Dict:
+    """Tenant ``t``'s requests alone: same arrival schedule, same (merged)
+    addresses and footprint — only the interfering tenants removed."""
+    keep = np.asarray(merged["tenant"]) == t
+    out = dict(merged)
+    for k in ("arrival_us", "is_read", "offset_bytes", "size_bytes",
+              "tenant"):
+        out[k] = np.asarray(merged[k])[keep]
+    return out
+
+
+def run_multi_tenant(cfg, scn: MultiTenantMix,
+                     designs: Sequence[str]) -> Dict:
+    designs = tuple(designs)
+    names = tuple(scn.workloads)
+    if len(names) == 1 and names[0] in MIXES:  # Table-3 mix by name
+        mix_name, names = names[0], MIXES[names[0]]
+    else:
+        mix_name = "+".join(names)
+    merged = mix_traces(mix_name, scn.n_requests_each, scn.seed)
+    offered = bench.offered_utilization(merged, cfg)
+    accel = 1.0
+    if scn.target_util is not None:
+        merged, accel = bench.accelerate(merged, cfg, scn.target_util)
+    bench.record_accel(mix_name, cfg, accel, offered, scn.target_util)
+    # mix + one solo run per tenant, all designs, ONE planner batch
+    seeds = ((scn.seed + 7),) * len(designs)
+    runs = [(cfg, _decompose(cfg, merged), designs, seeds, "auto")]
+    for t in range(len(names)):
+        runs.append((cfg, _decompose(cfg, _tenant_filter(merged, t)),
+                     designs, seeds, "auto"))
+    out = _simulate_batch(runs)
+    mix_res, solo_res = out[0], out[1:]
+
+    per_design: Dict = {}
+    scale = TICK_NS * 1e-3
+    for i, d in enumerate(designs):
+        rec = design_metrics(mix_res[i], names)
+        slowdowns = {}
+        for t, tname in enumerate(names):
+            mix_lat = mix_res[i].tenant_latencies().get(t)
+            solo_lat = solo_res[t][i].req_latency
+            if mix_lat is None or not len(mix_lat) or not len(solo_lat):
+                continue
+            slowdowns[tname] = {
+                "mean": round(float(mix_lat.mean() / solo_lat.mean()), 4),
+                "p99": round(float(
+                    np.percentile(mix_lat, 99)
+                    / max(np.percentile(solo_lat, 99), 1e-9)), 4),
+                "solo_mean_us": round(float(solo_lat.mean() * scale), 3),
+            }
+            rec["tenants"][tname]["slowdown_vs_solo"] = \
+                slowdowns[tname]["mean"]
+        sd = [v["mean"] for v in slowdowns.values()]
+        rec["slowdowns"] = slowdowns
+        # max/min fairness (1.0 = all tenants slowed equally)
+        rec["fairness"] = round(min(sd) / max(sd), 4) if sd else 1.0
+        per_design[d] = rec
+    return {
+        "scenario": "multi_tenant",
+        "mix": mix_name,
+        "tenants": list(names),
+        "accel_factor": round(accel, 4),
+        "offered_util": round(offered, 5),
+        "designs": per_design,
+    }
+
+
+# ---------------------------------------------------------------------------
+# burst scaling stress
+# ---------------------------------------------------------------------------
+
+
+def run_burst_scale(cfg, scn: BurstScale, designs: Sequence[str]) -> Dict:
+    designs = tuple(designs)
+    n_req = scn.n_requests or default_n_requests(scn.workload)
+    base = trace_for(scn.workload, n_req, scn.seed)
+    offered = bench.offered_utilization(base, cfg)
+    seeds = ((scn.seed + 7),) * len(designs)
+    runs = []
+    for f in scn.factors:
+        tr = dict(base)
+        tr["arrival_us"] = np.asarray(base["arrival_us"], np.float64) / f
+        runs.append((cfg, _decompose(cfg, tr), designs, seeds, "auto"))
+    out = _simulate_batch(runs)
+    tenant_names = tuple(base.get("tenant_names", ()))
+    return {
+        "scenario": "burst_scale",
+        "workload": scn.workload,
+        "n_requests": len(base["arrival_us"]),
+        "factors": [float(f) for f in scn.factors],
+        "offered_util_base": round(offered, 5),
+        "designs": {
+            d: {str(float(f)): design_metrics(res[i], tenant_names)
+                for f, res in zip(scn.factors, out)}
+            for i, d in enumerate(designs)
+        },
+    }
+
+
+def run_scenario(cfg, scenario, designs: Sequence[str]) -> Dict:
+    """Dispatch a declarative scenario spec to its engine."""
+    if isinstance(scenario, QueueDepthSweep):
+        return run_queue_depth_sweep(cfg, scenario, designs)
+    if isinstance(scenario, MultiTenantMix):
+        return run_multi_tenant(cfg, scenario, designs)
+    if isinstance(scenario, BurstScale):
+        return run_burst_scale(cfg, scenario, designs)
+    raise TypeError(f"unknown scenario {type(scenario).__name__}")

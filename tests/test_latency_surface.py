@@ -1,0 +1,107 @@
+"""Host-request latency surface pinned against scalar references.
+
+``SimResult.req_latency`` / ``req_completion`` (and the ``p99_latency_us``
+/ ``latency_cdf_us`` metrics on top) were dead code until the workloads
+subsystem started consuming them; these tests pin the vectorized
+scatter-reduce in ``sim._finish_result`` — including its GC exclusion —
+against a plain-Python per-transaction loop on tiny fixtures.
+"""
+import numpy as np
+import pytest
+
+from repro.ssd import decompose_trace, perf_optimized, simulate
+from repro.ssd.config import TICK_NS
+from repro.ssd.sim import _nominal_order
+from repro.traces.generator import gen_trace, to_pages
+
+from conftest import mk_txns
+
+
+def _scalar_request_surface(cfg, txns, res):
+    """Reference: walk transactions one by one in the scan's (nominal)
+    order, folding completions/arrivals into per-request records; GC rows
+    (req < 0) are background traffic and never touch a record."""
+    order = _nominal_order(cfg, txns)
+    req = np.asarray(txns["req"])[order]
+    arrival = np.asarray(txns["arrival"])[order]
+    done, arr = {}, {}
+    for i in range(len(req)):
+        r = int(req[i])
+        if r < 0:
+            continue
+        done[r] = max(done.get(r, 0), int(res.completion[i]))
+        arr[r] = min(arr.get(r, 1 << 62), int(arrival[i]))
+    ids = sorted(done)
+    lat = np.array([done[r] - arr[r] for r in ids], np.int64)
+    comp = np.array([done[r] for r in ids], np.int64)
+    return lat, comp
+
+
+@pytest.fixture(scope="module")
+def gc_heavy(tiny_cfg_gc):
+    """A write-heavy trace whose decomposition injects GC transactions."""
+    tr = gen_trace("prxy_0", 300, seed=5, footprint_bytes=4 << 20)
+    tr = dict(tr)
+    tr["arrival_us"] = tr["arrival_us"] / 8.0
+    pages = to_pages(tr, tiny_cfg_gc.page_bytes)
+    txns = decompose_trace(
+        tiny_cfg_gc, pages, footprint_pages=int(pages["footprint_pages"])
+    )
+    assert (np.asarray(txns["req"]) < 0).any(), "fixture must contain GC"
+    return txns
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg_gc():
+    return perf_optimized(rows=2, cols=2, pages_per_block=16)
+
+
+class TestRequestSurfacePins:
+    def test_req_latency_matches_scalar_reference(self, tiny_cfg, tiny_txns):
+        res = simulate(tiny_cfg, tiny_txns, "baseline")
+        lat, comp = _scalar_request_surface(tiny_cfg, tiny_txns, res)
+        assert np.array_equal(res.req_latency, lat)
+        assert np.array_equal(res.req_completion, comp)
+
+    def test_gc_rows_are_excluded(self, tiny_cfg_gc, gc_heavy):
+        res = simulate(tiny_cfg_gc, gc_heavy, "baseline")
+        lat, comp = _scalar_request_surface(tiny_cfg_gc, gc_heavy, res)
+        assert np.array_equal(res.req_latency, lat)
+        assert np.array_equal(res.req_completion, comp)
+        # every host request is represented exactly once
+        assert len(res.req_latency) == gc_heavy.n_requests
+
+    def test_gc_exclusion_hand_built(self, tiny_cfg):
+        # 3 host reads + 1 GC-tagged read (req = -1) that finishes LAST:
+        # were GC counted, some request's latency would absorb its tail
+        txns = mk_txns([0.0, 0.0, 0.0, 0.0], [0, 0, 0, 0], [0, 2, 4, 0],
+                       [4096] * 4, tiny_cfg)
+        txns["req"] = np.array([0, 1, 2, -1], np.int64)
+        res = simulate(tiny_cfg, txns, "baseline")
+        assert len(res.req_latency) == 3
+        lat, comp = _scalar_request_surface(tiny_cfg, txns, res)
+        assert np.array_equal(res.req_latency, lat)
+
+    def test_p99_and_cdf_match_numpy_reference(self, tiny_cfg, tiny_txns):
+        res = simulate(tiny_cfg, tiny_txns, "venice")
+        want_p99 = float(np.percentile(res.req_latency, 99)) * TICK_NS * 1e-3
+        assert res.p99_latency_us() == pytest.approx(want_p99)
+        xs, ys = res.latency_cdf_us()
+        assert len(xs) == len(ys) == len(res.req_latency)
+        assert (np.diff(xs) >= 0).all()
+        assert ys[0] == pytest.approx(1 / len(ys))
+        assert ys[-1] == pytest.approx(1.0)
+        assert np.array_equal(
+            xs, np.sort(res.req_latency) * (TICK_NS * 1e-3)
+        )
+        pcts = res.latency_percentiles_us()
+        assert pcts["p99"] == pytest.approx(want_p99)
+        assert pcts["p50"] <= pcts["p95"] <= pcts["p99"]
+
+    def test_surface_is_design_agnostic_metadata(self, tiny_cfg, tiny_txns):
+        """req_completion/req_tenant must not perturb the simulation: the
+        pre-existing arrays are byte-identical to the seed's semantics."""
+        a = simulate(tiny_cfg, tiny_txns, "baseline")
+        b = simulate(tiny_cfg, tiny_txns, "baseline")
+        assert np.array_equal(a.completion, b.completion)
+        assert a.req_tenant is None  # untagged trace stays untagged

@@ -1,0 +1,174 @@
+"""Scenario engine: closed-loop QD sweeps, multi-tenant parity, burst scale.
+
+The load-bearing invariant: tenant attribution is pure metadata.  A tagged
+multi-tenant run must be BIT-EXACT with the untagged run of the same merged
+trace, and per-tenant metrics must merge back to the untagged aggregates.
+"""
+import numpy as np
+import pytest
+
+from repro.ssd import bench, decompose_trace, simulate
+from repro.traces.generator import mix_traces, to_pages
+from repro.workloads.scenario import (
+    BurstScale,
+    MultiTenantMix,
+    QueueDepthSweep,
+    closed_loop_arrivals,
+    run_scenario,
+)
+
+
+@pytest.fixture(autouse=True)
+def _clean_caches():
+    bench.clear_caches()
+    yield
+    bench.clear_caches()
+
+
+@pytest.fixture(scope="module")
+def tagged_untagged(tiny_cfg):
+    """The same merged mix trace decomposed with and without tenant tags."""
+    merged = mix_traces("mix3", 60, seed=1)
+    merged["arrival_us"] = merged["arrival_us"] / 8.0  # intensify
+    untagged = {k: v for k, v in merged.items()
+                if k not in ("tenant", "tenant_names")}
+
+    def dec(tr):
+        pages = to_pages(tr, tiny_cfg.page_bytes)
+        return decompose_trace(
+            tiny_cfg, pages, footprint_pages=int(pages["footprint_pages"])
+        )
+
+    return dec(merged), dec(untagged)
+
+
+class TestTenantParity:
+    def test_attribution_is_pure_metadata(self, tiny_cfg, tagged_untagged):
+        tagged, untagged = tagged_untagged
+        for k in tagged:
+            assert np.array_equal(tagged[k], untagged[k]), k
+        a = simulate(tiny_cfg, tagged, "venice")
+        b = simulate(tiny_cfg, untagged, "venice")
+        # bit-exact aggregates: attribution never reaches the scan
+        assert np.array_equal(a.completion, b.completion)
+        assert np.array_equal(a.req_latency, b.req_latency)
+        assert np.array_equal(a.req_completion, b.req_completion)
+        assert a.exec_ticks == b.exec_ticks
+        assert a.req_tenant is not None and b.req_tenant is None
+
+    def test_per_tenant_metrics_merge_to_aggregate(self, tiny_cfg,
+                                                   tagged_untagged):
+        tagged, _ = tagged_untagged
+        res = simulate(tiny_cfg, tagged, "baseline")
+        tl = res.tenant_latencies()
+        assert len(tl) == 2  # mix3 = prxy_0 + rsrch_0
+        # merged per-tenant arrays are a permutation of the aggregate …
+        assert sum(len(v) for v in tl.values()) == len(res.req_latency)
+        merged = np.sort(np.concatenate(list(tl.values())))
+        assert np.array_equal(merged, np.sort(res.req_latency))
+        # … and so is every derived statistic (sum pinned bit-exact)
+        assert merged.sum() == res.req_latency.sum()
+
+
+class TestQueueDepthSweep:
+    def test_closed_loop_arrivals_identity(self):
+        comp = np.array([500, 300, 800, 600, 900], np.int64)  # ticks
+        a = closed_loop_arrivals(comp, 2)
+        # first QD requests at t=0; request k issued at completion[k-2] (us)
+        assert a[0] == a[1] == 0.0
+        assert a[2] == pytest.approx(5.0)  # 500 ticks = 5us
+        assert a[3] == pytest.approx(5.0)  # running max keeps FIFO causal
+        assert a[4] == pytest.approx(8.0)
+        assert (np.diff(a) >= 0).all()
+        # degenerate depths
+        assert (closed_loop_arrivals(comp, 0) == 0).all()
+        assert (closed_loop_arrivals(comp, 99) == 0).all()
+
+    def test_sweep_shape_and_feedback(self, tiny_cfg):
+        scn = QueueDepthSweep("proj_3", qds=(1, 16), n_requests=60, iters=2)
+        out = run_scenario(tiny_cfg, scn, ("baseline", "venice"))
+        assert out["qds"] == [1, 16]
+        for d in ("baseline", "venice"):
+            per = out["designs"][d]
+            assert set(per) == {"1", "16"}
+            for m in per.values():
+                assert m["n_requests"] == 60
+                assert 0 < m["p50_us"] <= m["p95_us"] <= m["p99_us"]
+                assert m["iops"] > 0
+        # deterministic: the fixed-point iteration replays identically
+        again = run_scenario(tiny_cfg, scn, ("baseline", "venice"))
+        assert again == out
+
+    def test_deeper_queue_does_not_lose_throughput(self, tiny_cfg):
+        """The closed-loop signature: more outstanding requests keep the
+        device busier — aggregate throughput must not degrade from QD 1 to
+        a saturating depth (the whole point of evaluating under depth)."""
+        scn = QueueDepthSweep("proj_3", qds=(1, 64), n_requests=100, iters=3)
+        out = run_scenario(tiny_cfg, scn, ("baseline",))
+        per = out["designs"]["baseline"]
+        assert per["64"]["iops"] >= per["1"]["iops"] * 0.95
+
+    def test_sweep_on_mix_carries_tenants(self, tiny_cfg):
+        scn = QueueDepthSweep("mix3", qds=(4,), n_requests=60, iters=1)
+        out = run_scenario(tiny_cfg, scn, ("baseline",))
+        m = out["designs"]["baseline"]["4"]
+        assert set(m["tenants"]) == {"prxy_0", "rsrch_0"}
+
+
+class TestMultiTenantAndBurst:
+    def test_multi_tenant_fairness_record(self, tiny_cfg):
+        scn = MultiTenantMix(("mix3",), n_requests_each=50, seed=1)
+        out = run_scenario(tiny_cfg, scn, ("baseline", "venice"))
+        assert out["tenants"] == ["prxy_0", "rsrch_0"]
+        assert out["accel_factor"] >= 1.0
+        for d, rec in out["designs"].items():
+            assert 0 < rec["fairness"] <= 1.0
+            assert set(rec["slowdowns"]) == {"prxy_0", "rsrch_0"}
+            for t, sd in rec["slowdowns"].items():
+                assert sd["mean"] > 0
+                assert rec["tenants"][t]["slowdown_vs_solo"] == sd["mean"]
+        # the audit satellite: the accelerate factor is recorded in PERF
+        assert f"mix3/{tiny_cfg.name}" in bench.PERF["accel"]
+        rec = bench.PERF["accel"][f"mix3/{tiny_cfg.name}"]
+        assert rec["factor"] == out["accel_factor"]
+        assert rec["offered_util"] > 0
+
+    def test_ad_hoc_tenant_tuple(self, tiny_cfg):
+        scn = MultiTenantMix(("prxy_0", "rsrch_0", "mds_0"),
+                             n_requests_each=40, seed=2)
+        out = run_scenario(tiny_cfg, scn, ("baseline",))
+        assert out["mix"] == "prxy_0+rsrch_0+mds_0"
+        assert len(out["designs"]["baseline"]["slowdowns"]) == 3
+
+    def test_ingested_trace_as_tenant(self, tiny_cfg):
+        """A registered real trace mixes with a synthetic tenant."""
+        import os
+
+        from repro.traces.generator import CUSTOM_TRACES
+        from repro.workloads import ingest_file
+
+        fixture = os.path.join(os.path.dirname(__file__), "data",
+                               "msr_sample.csv")
+        try:
+            name = ingest_file(fixture, name="test_mix_fx")
+            scn = MultiTenantMix((name, "proj_3"), n_requests_each=40,
+                                 seed=3)
+            out = run_scenario(tiny_cfg, scn, ("baseline",))
+            assert out["tenants"] == [name, "proj_3"]
+            assert set(out["designs"]["baseline"]["slowdowns"]) \
+                == {name, "proj_3"}
+        finally:
+            CUSTOM_TRACES.pop("test_mix_fx", None)
+
+    def test_burst_scale_records_offered_util(self, tiny_cfg):
+        scn = BurstScale("hm_0", factors=(1.0, 8.0), n_requests=50)
+        out = run_scenario(tiny_cfg, scn, ("baseline",))
+        assert out["offered_util_base"] > 0
+        per = out["designs"]["baseline"]
+        assert set(per) == {"1.0", "8.0"}
+        # 8x acceleration compresses the replay window: throughput rises
+        assert per["8.0"]["iops"] > per["1.0"]["iops"]
+
+    def test_unknown_scenario_rejected(self, tiny_cfg):
+        with pytest.raises(TypeError):
+            run_scenario(tiny_cfg, object(), ("baseline",))

@@ -1,0 +1,195 @@
+"""Workloads subsystem: ingestion, characterization, registry round trips."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.traces.generator import (
+    CUSTOM_TRACES,
+    WORKLOADS,
+    WorkloadStats,
+    gen_trace,
+    trace_for,
+)
+from repro.workloads import (
+    characterize,
+    compact_footprint,
+    ingest_file,
+    iter_trace_csv,
+    load_trace,
+    register_workload,
+    sniff_format,
+    write_msr_csv,
+)
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data", "msr_sample.csv")
+
+
+@pytest.fixture(autouse=True)
+def _clean_registries():
+    yield
+    for k in [k for k in CUSTOM_TRACES if k.startswith("test_")]:
+        del CUSTOM_TRACES[k]
+    for k in [k for k in WORKLOADS if k.startswith("test_")]:
+        del WORKLOADS[k]
+
+
+class TestIngestion:
+    def test_fixture_sniffs_as_msr(self):
+        assert sniff_format(FIXTURE) == "msr"
+
+    def test_streamed_and_whole_file_paths_identical(self):
+        whole = load_trace(FIXTURE, compact=False)
+        for batch in (1, 7, 64, 100000):
+            batches = list(iter_trace_csv(FIXTURE, batch_requests=batch))
+            assert sum(len(b["arrival_us"]) for b in batches) \
+                == len(whole["arrival_us"])
+            streamed_off = np.concatenate(
+                [b["offset_bytes"] for b in batches])
+            assert np.array_equal(streamed_off, whole["offset_bytes"])
+            streamed_ts = np.concatenate([b["arrival_us"] for b in batches])
+            assert np.array_equal(streamed_ts - streamed_ts[0],
+                                  whole["arrival_us"])
+        # memory bound: a small batch size yields many small batches
+        assert len(list(iter_trace_csv(FIXTURE, batch_requests=50))) == 12
+
+    def test_msr_fields_parse(self, tmp_path):
+        p = tmp_path / "mini.csv"
+        p.write_text(
+            "128166372003061629,srv,0,Write,4096,8192,80311\n"
+            "128166372003071629,srv,0,Read,0,4096,151687\n"
+        )
+        tr = load_trace(str(p), compact=False)
+        assert np.array_equal(tr["is_read"], [False, True])
+        assert np.array_equal(tr["offset_bytes"], [4096, 0])
+        assert np.array_equal(tr["size_bytes"], [8192, 4096])
+        # FILETIME 100ns ticks -> us, rebased to 0
+        assert tr["arrival_us"] == pytest.approx([0.0, 1000.0])
+
+    def test_blktrace_fields_parse(self, tmp_path):
+        p = tmp_path / "blk.csv"
+        p.write_text(
+            "time_s,op,sector,nsectors\n"  # header skipped
+            "0.001,WS,8,16\n"
+            "0.002,R,0,8\n"
+        )
+        assert sniff_format(str(p)) == "blktrace"
+        tr = load_trace(str(p), compact=False)
+        assert np.array_equal(tr["is_read"], [False, True])
+        assert np.array_equal(tr["offset_bytes"], [8 * 512, 0])
+        assert np.array_equal(tr["size_bytes"], [16 * 512, 8 * 512])
+        assert tr["arrival_us"] == pytest.approx([0.0, 1000.0])
+
+    def test_compaction_preserves_structure(self):
+        # two extents separated by a 1 GB hole; sequential pair inside one
+        tr = {
+            "name": "t",
+            "arrival_us": np.arange(4, dtype=np.float64),
+            "is_read": np.ones(4, bool),
+            "offset_bytes": np.array(
+                [0, 4096, (1 << 30), (1 << 30) + 100], np.int64),
+            "size_bytes": np.array([4096, 4096, 100, 4096], np.int64),
+            "footprint_bytes": (1 << 30) + 8192,
+        }
+        out = compact_footprint(tr)
+        off = out["offset_bytes"]
+        # adjacency inside extents survives; the hole is gone
+        assert off[1] - off[0] == 4096  # still sequential
+        assert off[3] - off[2] == 100  # intra-page remainder kept
+        assert out["footprint_bytes"] == 4 * 4096  # 2 + 2 covered pages
+        assert (off + out["size_bytes"] <= out["footprint_bytes"]).all()
+
+    def test_fixture_compaction_drops_the_hole(self):
+        raw = load_trace(FIXTURE, compact=False)
+        dense = load_trace(FIXTURE)
+        assert raw["footprint_bytes"] > (1 << 30)  # sparse on the wire
+        assert dense["footprint_bytes"] < (16 << 20)  # dense after ingest
+        assert np.array_equal(raw["size_bytes"], dense["size_bytes"])
+        assert np.array_equal(raw["is_read"], dense["is_read"])
+
+    def test_msr_writer_round_trips(self, tmp_path):
+        tr = gen_trace("wdev_0", 120, seed=9)
+        p = tmp_path / "rt.csv"
+        write_msr_csv(tr, str(p))
+        back = load_trace(str(p), compact=False)
+        assert np.array_equal(back["offset_bytes"], tr["offset_bytes"])
+        assert np.array_equal(back["size_bytes"], tr["size_bytes"])
+        assert np.array_equal(back["is_read"], tr["is_read"])
+        assert back["arrival_us"] == pytest.approx(
+            tr["arrival_us"] - tr["arrival_us"][0], abs=0.2  # 0.1us ticks
+        )
+
+    def test_ingest_file_registers_for_replay(self):
+        name = ingest_file(FIXTURE, name="test_fixture")
+        assert name == "test_fixture"
+        tr = trace_for(name, 50)
+        assert len(tr["arrival_us"]) == 50  # sliced view
+        full = trace_for(name, None)
+        assert len(full["arrival_us"]) == 600
+
+    def test_register_rejects_traces_beyond_tick_budget(self):
+        """Arrivals past the int32 tick budget (~21 s) would wrap negative
+        in the transaction arrays — registration must refuse, not corrupt."""
+        from repro.traces.generator import register_trace
+
+        week = {
+            "name": "test_week",
+            "arrival_us": np.array([0.0, 7 * 86400e6]),  # a week apart
+            "is_read": np.ones(2, bool),
+            "offset_bytes": np.zeros(2, np.int64),
+            "size_bytes": np.full(2, 4096, np.int64),
+            "footprint_bytes": 1 << 20,
+        }
+        with pytest.raises(ValueError, match="tick budget"):
+            register_trace("test_week", week)
+        assert "test_week" not in CUSTOM_TRACES
+
+
+class TestCharacterize:
+    def test_round_trip_recovers_stats(self):
+        stats = WorkloadStats(read_pct=35, avg_kb=12.0, avg_iat_us=90.0)
+        tr = gen_trace("test_rt", 12000, seed=4, stats=stats)
+        prof = characterize(tr)
+        assert prof.stats.read_pct == pytest.approx(35, abs=2.0)
+        assert prof.stats.avg_kb == pytest.approx(12.0, rel=0.05)
+        assert prof.stats.avg_iat_us == pytest.approx(90.0, rel=0.05)
+        assert prof.n_requests == 12000
+        assert prof.footprint_bytes == tr["footprint_bytes"]
+
+    @pytest.mark.parametrize("name", ["hm_0", "src2_1", "prxy_0"])
+    def test_round_trip_on_table2_workloads(self, name):
+        prof = characterize(gen_trace(name, 10000, seed=1), name=name)
+        want = WORKLOADS[name]
+        assert prof.stats.read_pct == pytest.approx(want.read_pct, abs=2.5)
+        assert prof.stats.avg_kb == pytest.approx(want.avg_kb, rel=0.06)
+        assert prof.stats.avg_iat_us == pytest.approx(
+            want.avg_iat_us, rel=0.08)
+
+    def test_sequentiality_metric_responds(self):
+        seq = characterize(gen_trace("usr_0", 4000, seed=2, seq_frac=0.9,
+                                     hot_weight=0.0))
+        rnd = characterize(gen_trace("usr_0", 4000, seed=2, seq_frac=0.0,
+                                     hot_weight=0.0))
+        assert seq.seq_frac > rnd.seq_frac + 0.2
+
+    def test_hot_metric_responds(self):
+        hot = characterize(gen_trace("usr_0", 4000, seed=2, hot_weight=0.9))
+        cold = characterize(gen_trace("usr_0", 4000, seed=2, hot_weight=0.0))
+        assert hot.hot_frac > cold.hot_frac + 0.2
+
+    def test_register_workload_feeds_generator(self):
+        prof = characterize(load_trace(FIXTURE), name="test_msr")
+        stats = register_workload("test_msr", prof)
+        assert WORKLOADS["test_msr"] == stats
+        tr = gen_trace("test_msr", 3000, seed=0,
+                       **{k: v for k, v in prof.gen_kwargs().items()
+                          if k != "stats"}, stats=prof.stats)
+        refit = characterize(tr)
+        assert refit.stats.avg_kb == pytest.approx(stats.avg_kb, rel=0.06)
+        assert refit.stats.read_pct == pytest.approx(stats.read_pct, abs=3.0)
+
+    def test_empty_trace_rejected(self):
+        with pytest.raises(ValueError):
+            characterize({"arrival_us": np.zeros(0), "is_read": np.zeros(0),
+                          "offset_bytes": np.zeros(0, np.int64),
+                          "size_bytes": np.zeros(0, np.int64)})
