@@ -1,0 +1,115 @@
+"""Perf-trajectory report across committed BENCH_*.json artifacts.
+
+The repo's perf history lives in ``results/BENCH_*.json`` (one artifact
+per landed optimization, written by ``benchmarks/run.py --json``), but the
+trajectory itself was only recorded implicitly in CHANGES.md prose.  This
+tool prints it as a table — total/ftl/sim/compile/exec seconds plus the
+per-phase wall-clock — ordered by generation time, and writes
+``results/TRAJECTORY.md`` (uploaded as a CI artifact).
+
+Ordering: artifacts carry ``generated_at`` since the warm-path PR; older
+ones fall back to file mtime, then name (which happens to sort the
+pre-existing artifacts in landing order).  Presets are reported in
+separate tables — a --smoke probe and a quick run are not comparable.
+
+  PYTHONPATH=src python -m benchmarks.trajectory [--results results]
+      [--out results/TRAJECTORY.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PHASE_ORDER = ("fig4_9_10_13", "fig11", "fig12", "fig14", "fig15", "tail",
+               "tab4", "sec31")
+
+
+def load_artifacts(results_dir: str) -> list:
+    arts = []
+    for path in glob.glob(os.path.join(results_dir, "BENCH_*.json")):
+        try:
+            with open(path) as f:
+                art = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"[trajectory] skipping {path}: {e}")
+            continue
+        name = os.path.basename(path)
+        key = (art.get("generated_at") or "", os.path.getmtime(path), name)
+        arts.append((key, name, art))
+    arts.sort(key=lambda t: t[0])
+    return [(name, art) for _, name, art in arts]
+
+
+def _fmt(v, nd=1):
+    if v is None:
+        return "-"
+    return f"{float(v):.{nd}f}"
+
+
+def rows_for(arts: list) -> tuple:
+    """(header, rows) of the trajectory table for one preset's artifacts."""
+    phases = [p for p in PHASE_ORDER
+              if any(p in (a.get("phases") or {}) for _, a in arts)]
+    header = (["artifact", "total_s", "ftl_s", "sim_s", "compile_s",
+               "exec_s", "groups", "cache_hits(xc)"]
+              + [f"{p}_s" for p in phases])
+    rows = []
+    for name, art in arts:
+        ph = art.get("phases") or {}
+        xc = art.get("exec_cache") or {}
+        groups = art.get("groups")
+        rows.append(
+            [name.replace("BENCH_", "").replace(".json", ""),
+             _fmt(art.get("total_s")), _fmt(art.get("ftl_s_total"), 2),
+             _fmt(art.get("sim_s_total")),
+             _fmt(art.get("compile_s_total"), 2),
+             _fmt(art.get("exec_s_total"), 2),
+             str(len(groups)) if isinstance(groups, list) else "-",
+             str(xc.get("hits", "-"))]
+            + [_fmt((ph.get(p) or {}).get("s")) for p in phases]
+        )
+    return header, rows
+
+
+def render(results_dir: str) -> str:
+    arts = load_artifacts(results_dir)
+    by_preset: dict = {}
+    for name, art in arts:
+        by_preset.setdefault(art.get("preset") or "?", []).append(
+            (name, art))
+    lines = ["# Perf trajectory (committed BENCH_*.json artifacts)", ""]
+    lines.append("Regenerate: `PYTHONPATH=src python -m "
+                 "benchmarks.trajectory`.  Ordering: `generated_at`, then "
+                 "file mtime, then name.  Wall-clock fields are seconds; "
+                 "`cache_hits(xc)` counts executables served from the "
+                 "persistent AOT store (warm runs).")
+    for preset in sorted(by_preset):
+        header, rows = rows_for(by_preset[preset])
+        lines += ["", f"## preset: {preset}", ""]
+        lines.append("| " + " | ".join(header) + " |")
+        lines.append("|" + "---|" * len(header))
+        for r in rows:
+            lines.append("| " + " | ".join(r) + " |")
+    return "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results")
+    ap.add_argument("--out", default=None,
+                    help="markdown output path (default "
+                         "<results>/TRAJECTORY.md); '-' = stdout only")
+    args = ap.parse_args()
+    md = render(args.results)
+    print(md)
+    out = args.out or os.path.join(args.results, "TRAJECTORY.md")
+    if out != "-":
+        with open(out, "w") as f:
+            f.write(md)
+        print(f"[trajectory] written to {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Gather-free lookup primitives: one-hot compare-and-reduce.
+
+The trick behind the Pallas scout kernel (``kernels/scout_step.py``): a
+per-element table lookup ``table[idx]`` over a *batch* lowers on CPU/TPU to
+a generic gather — the exact lowering that made vmap-batched simulator
+lanes ~50x slower in the PR-3 measurement.  Reformulated as a broadcast
+compare against an iota followed by a masked reduction, the same lookup is
+pure elementwise/reduce work (VPU-friendly, no scatter/gather kernels),
+and it is *exact*: precisely one slot of the one-hot is set, so the integer
+sum returns that slot's value bit-for-bit.
+
+These helpers are the building blocks of the batched small-lane runner in
+``repro.ssd.sim`` (``_make_batched_static_step``); the Pallas kernel keeps
+its own fused formulation (its value is layout/tiling, see its docstring).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["onehot", "take", "unpack_bits"]
+
+
+def onehot(idx, size: int):
+    """bool [..., size]: slot ``idx`` set (all-false when idx out of range)."""
+    return idx[..., None] == jnp.arange(size, dtype=idx.dtype)
+
+
+def take(table, idx):
+    """Batched ``table[b, idx[b], ...]`` without a gather.
+
+    ``table`` [B, K, ...], ``idx`` int [B] -> [B, ...].  Integer tables
+    only (the masked sum over the one-hot axis is exact because exactly
+    one slot contributes).
+    """
+    k = table.shape[1]
+    sel = onehot(idx, k).reshape(idx.shape + (k,) + (1,) * (table.ndim - 2))
+    return jnp.sum(jnp.where(sel, table, 0), axis=1)
+
+
+def unpack_bits(words, nbits: int):
+    """bool [..., nbits] from little-endian packed bytes [..., W].
+
+    Inverse of ``np.packbits(..., axis=-1, bitorder="little")`` for
+    ``W = ceil(nbits / 8)``.
+    """
+    bits = (words[..., None].astype(jnp.int32) >> jnp.arange(8)) & 1
+    return bits.reshape(words.shape[:-1] + (-1,))[..., :nbits].astype(bool)

@@ -346,6 +346,47 @@ def resolve_specs(designs: Sequence[str]) -> tuple:
 
 
 # ---------------------------------------------------------------------------
+# per-transaction pre-gathered tables (batched small-lane runner)
+#
+# The node-indexed tables (cmask/hops/dist/cand2_ok/fc_fixed) are static
+# data, and a lane's transaction stream is known before the scan — so the
+# batched runner never gathers them at runtime: every node lookup is
+# resolved HERE, host-side, into per-transaction arrays that ride the scan
+# as sliced inputs.  Only state-dependent lookups (plane free-at, live FC
+# selection) remain in the step, as one-hot compare-and-reduce
+# (``repro.kernels.onehot``).  Candidate masks are bit-packed along the
+# resource axis (uint8, little-endian) to keep the [n, F_pad, 2, R] blow-up
+# at R/8 bytes; the step unpacks them with shifts (no gather either).
+# ---------------------------------------------------------------------------
+
+
+def pregather_node_tables(tables_row, nodes: np.ndarray) -> dict:
+    """Resolve one lane's node-indexed tables per transaction.
+
+    ``tables_row``: one design's view of :class:`LaneTables` (no lane
+    axis); ``nodes``: int array [n] of the lane's transaction nodes.
+    Returns numpy arrays (lane-major, length n; the planner stacks them
+    time-major per batch):
+      ``mask_words`` uint8 [n, F_pad, 2, ceil(R_pad/8)], ``hops`` int32
+      [n, F_pad, 2], ``dist`` int32 [n, F_pad], ``cand2`` bool [n],
+      ``fc_fixed`` int32 [n, 2].
+    """
+    cmask = np.asarray(tables_row.cmask)  # [F0, N, 2, R]
+    packed = np.packbits(cmask, axis=-1, bitorder="little")
+    return dict(
+        mask_words=np.ascontiguousarray(packed.transpose(1, 0, 2, 3)[nodes]),
+        hops=np.ascontiguousarray(
+            np.asarray(tables_row.hops).transpose(1, 0, 2)[nodes]
+        ),
+        dist=np.ascontiguousarray(np.asarray(tables_row.dist).T[nodes]),
+        cand2=np.ascontiguousarray(np.asarray(tables_row.cand2_ok)[nodes]),
+        fc_fixed=np.ascontiguousarray(
+            np.asarray(tables_row.fc_fixed)[nodes]
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
 # channel-decomposition proof obligation
 #
 # The simulator may partition a lane's transactions by channel row and scan

@@ -48,24 +48,29 @@ planning pass serves the phase from the run cache.
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
+import os
 import time
 from typing import Sequence
 
 import numpy as np
 
 from repro.ssd import bench
+from repro.ssd import exec_cache
 from repro.ssd import sim as S
 from repro.ssd.config import SSDConfig
 from repro.ssd.designs import (
     KIND_SCOUT,
     LaneTables,
     lower_designs,
+    pregather_node_tables,
     resolve_specs,
     rows_confined,
 )
 
-__all__ = ["RunRequest", "execute_requests", "execute_sim_runs", "prefetch"]
+__all__ = ["RunRequest", "execute_requests", "execute_sim_runs", "prefetch",
+           "precompile", "prewarm_small_keys"]
 
 # "auto" channel-decomposes a row-confined lane only when every row is
 # expected to span several chunks (n >= rows * this * CHUNK): each row-lane
@@ -78,6 +83,140 @@ AUTO_DECOMPOSE_MIN_CHUNKS_PER_ROW = 4
 # capacity are not recompiled for smaller later pools (execute time scales
 # with the trimmed chunk count, not the capacity).
 _CAP_SEEN: dict = {}
+
+# ---- small-lane policy (perf only; every layout is bit-identical) --------
+# A lane at or below this many scan chunks counts as "small": small-lane
+# pools are dispatch-bound (the QoS tail phase: hundreds of 1-2 chunk
+# scans), so the planner collapses them — the measured policy, see
+# DESIGN.md §2.2 and the A/B table in EXPERIMENTS.md:
+#
+#   * a small STATIC set of <= n_shards * _BATCH_MAX_PER_SHARD lanes runs
+#     in the gather-free batched runner as ONE dispatch.  The per-shard
+#     width cap is the measured fork/join cliff of XLA:CPU's parallel
+#     task assigner: at ~[8, R_pad] int32 per op it starts splitting
+#     every elementwise op across the intra-op pool, and the per-op
+#     fork/join tax (~50-80us/step) dwarfs the batching win.  Below the
+#     cliff the batched step runs ~0.5us per lane-step vs ~2.4us
+#     unbatched — the PR-3 "50x slower" verdict was a property of the
+#     vmap gather/scatter lowering, not of batching;
+#   * any larger small-lane set — static or scout — runs as STACK groups:
+#     K sequential unbatched lanes per shard (lax.map), one dispatch per
+#     n_shards*K lanes, immune to the fork/join cliff.
+#
+# Above SMALL_LANE_MAX_CHUNKS chunks the flat sharded scan wins (the
+# dispatch barrier amortizes, and a 3+-chunk lane is usually served by an
+# already-compiled flat executable — pulling it into a small-lane layout
+# would BUY a compile to save a dispatch).  0 disables both layouts.
+SMALL_LANE_MAX_CHUNKS = int(os.environ.get("REPRO_SMALL_LANE_CHUNKS", "2"))
+_BATCH_MIN_LANES = 3  # fewer small lanes than this stay on the flat path
+_BATCH_MAX_PER_SHARD = 4  # fork/join cliff (measured; see above)
+_STACK_MAX_K = 16  # lanes executed sequentially per shard, at most
+
+# background compile pool for the overlapped compile/execute pipeline: on
+# an n-core host, n-1 workers compile while the main thread dispatches
+# already-compiled groups (XLA compilation releases the GIL).
+_COMPILE_POOL = None
+
+# executable compiles/loads already in flight (cross-phase: ``precompile``
+# submits a whole preset's worth before the first phase executes; the
+# dispatch loop adopts the futures instead of resubmitting)
+_INFLIGHT: dict = {}
+
+# keys delegated to the out-of-process compile server (repro.ssd.xc_worker)
+# and the server process handle.  Process mode needs the persistent store
+# (the server publishes through it) and is the default when one is
+# configured; REPRO_COMPILE_PROC=0 forces in-process threads.
+_PROC_KEYS: set = set()
+_PROC = None
+
+
+def _proc_mode() -> bool:
+    return (exec_cache.cache_dir() is not None
+            and os.environ.get("REPRO_COMPILE_PROC", "1") != "0")
+
+
+def _proc_alive() -> bool:
+    return _PROC is not None and _PROC.poll() is None
+
+
+def _schedule_compiles(keys: list) -> None:
+    """Route missing executables to the compile server (process mode) or
+    the background thread pool."""
+    keys = [k for k in keys
+            if k not in S._EXEC_CACHE and k not in _INFLIGHT
+            and k not in _PROC_KEYS and not exec_cache.has(k)]
+    if not keys:
+        return
+    # keys arrive in need order (pool insertion follows run order, i.e.
+    # phase order) — the compile stream publishes what the dispatcher
+    # will ask for first
+    if _proc_mode():
+        global _PROC
+        import subprocess
+        import sys
+        import tempfile
+
+        # the first two programs gate the first phase, and nothing can
+        # execute until they exist — compile them HERE, synchronously and
+        # at full speed, while the server boots (its jax import alone is
+        # ~3s) and works through the rest of the preset
+        local, remote = keys[:2], keys[2:]
+        if remote:
+            fd, path = tempfile.mkstemp(suffix=".xckeys")
+            with os.fdopen(fd, "wb") as f:
+                import pickle
+
+                pickle.dump(remote, f)
+            _PROC = subprocess.Popen(
+                [sys.executable, "-m", "repro.ssd.xc_worker", path],
+                env=dict(os.environ),
+            )
+            _PROC_KEYS.update(remote)
+        for k in local:
+            S.ensure_compiled(k)
+    else:
+        for k in keys:
+            _INFLIGHT[k] = _compile_pool().submit(S.ensure_compiled, k,
+                                                  None)
+
+
+def _await_server(key: tuple):
+    """Poll-future body: wait for the compile server to publish ``key``,
+    then load it; compile locally if the server dies or stalls."""
+    deadline = time.perf_counter() + 600.0
+    while (_proc_alive() and not exec_cache.has(key)
+           and time.perf_counter() < deadline):
+        time.sleep(0.05)
+    return S.ensure_compiled(key)
+
+
+def _compile_pool():
+    global _COMPILE_POOL
+    if _COMPILE_POOL is None:
+        # at least 2 workers even on a 2-core host: while the dispatcher
+        # is starved (cold start of a phase) the cores should be running
+        # two backend compiles, not one
+        n = int(os.environ.get(
+            "REPRO_COMPILE_WORKERS",
+            str(min(4, max(2, (os.cpu_count() or 2) - 1))),
+        ))
+        _COMPILE_POOL = concurrent.futures.ThreadPoolExecutor(
+            max_workers=max(1, n), thread_name_prefix="xc-compile",
+        )
+    return _COMPILE_POOL
+
+
+def _pow2ceil(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+# fully-generic promotion tuple (every _PROMOTABLE scalar stays traced):
+# the small-lane layouts trade per-step leanness for ONE executable per
+# (geometry, capacity, layout) across every pool, phase and preset
+_NO_PROMO = (None,) * len(S._PROMOTABLE)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,71 +294,299 @@ def _pool_promotions(lanes: list) -> tuple:
     return S._promotions(_Stack())
 
 
-def _run_pool(sig: tuple, lanes: list, has_scout: bool) -> list:
-    """Execute one (geometry, cost class) pool of lanes; fills lane.out.
+@dataclasses.dataclass
+class _GroupPlan:
+    """One planned dispatch: a group of lanes bound to an executable key."""
 
-    Returns the pool's perf records (one entry per dispatched group).
+    variant: str  # "lane" | "stack" | "batched"
+    sig: tuple
+    lanes: list  # dispatch order; may contain duplicate refs (padding)
+    cap: int
+    n_shards: int
+    per_shard: int  # 1 (lane) | K (stack) | Bs (batched)
+    k_max: int
+    has_scout: bool
+    fixed: tuple
+    key: tuple = None
+    est_exec: float = 0.0
+    est_compile: float = 0.0
+
+    def finalize(self) -> "_GroupPlan":
+        if self.variant == "lane":
+            self.key = S.lane_group_key(self.sig, self.cap, len(self.lanes),
+                                        self.k_max, self.has_scout,
+                                        self.fixed, self.n_shards)
+        elif self.variant == "stack":
+            self.key = S.stack_group_key(self.sig, self.cap, self.per_shard,
+                                         self.k_max, self.has_scout,
+                                         self.fixed, self.n_shards)
+        else:
+            self.key = S.batched_group_key(self.sig, self.cap,
+                                           self.per_shard, self.fixed,
+                                           self.n_shards)
+        # cost model (ordering heuristics only): scout programs compile
+        # several times slower than static ones (the nested scout
+        # while-loops); execute cost scales with scheduled scan chunks
+        # (scout steps are ~4x a static step)
+        w = 4.0 if self.has_scout else 1.0
+        self.est_compile = (3.0 if self.has_scout else 1.0) * (
+            1.5 if self.variant != "lane" else 1.0
+        )
+        self.est_exec = w * sum(ln.n_chunks for ln in self.lanes)
+        return self
+
+
+def _pad_block(block: list, size: int) -> list:
+    block = list(block)
+    while len(block) < size:
+        block.append(block[-1])
+    return block
+
+
+def _plan_pool(sig: tuple, lanes: list, has_scout: bool) -> list:
+    """Lay one (geometry, cost class) pool out as dispatchable groups.
+
+    Big lanes: one UNBATCHED lane per device shard, sorted by length (the
+    sorted-length grouping keeps a group's barrier cheap).  Small lanes
+    (<= SMALL_LANE_MAX_CHUNKS chunks): statically-routed ones collapse
+    into the gather-free batched runner, scout ones stack K-per-shard —
+    both cut the dispatch count of tiny-scan pools ~K/B-fold.  A pool
+    smaller than the device count compiles at its own size; remainder
+    blocks are padded with duplicate lanes (discarded outputs are cheaper
+    than another executable).
     """
     n_shards = S.host_device_count()
     k_max = (max(ln.spec.n_scouts for ln in lanes) if has_scout else 1)
     fixed = _pool_promotions(lanes)
-    cap = max(_CAP_SEEN.get(sig, 0), S._pad_to(max(ln.n for ln in lanes)))
-    _CAP_SEEN[sig] = cap
+    order = sorted(lanes, key=lambda ln: ln.n_chunks)
 
-    perf_groups = []
-    # one lane per device shard, unbatched inside (sim._build_group_fn);
-    # sorting by length keeps the lanes sharing a group's barrier similar
-    # in cost.  A pool smaller than the device count compiles at its own
-    # size (no duplicate work for e.g. a solo ``simulate`` on a many-core
-    # host); only the remainder block of a larger pool is padded with a
-    # duplicate lane, where the discarded re-execution is cheaper than a
-    # smaller-group executable
-    G = max(1, min(n_shards, len(lanes)))
-    order = sorted(range(len(lanes)), key=lambda i: lanes[i].n_chunks)
-    groups = []
-    for i in range(0, len(order), G):
-        block = [lanes[j] for j in order[i : i + G]]
-        while len(block) % G:
-            block.append(block[-1])
-        groups.append(block)
+    small_max = SMALL_LANE_MAX_CHUNKS
+    small = [ln for ln in order if ln.n_chunks <= small_max]
+    flat = [ln for ln in order if ln.n_chunks > small_max]
+    plans = []
+    # the small-lane window starts where the collapsed layouts save
+    # dispatches over the flat path (> 2 per-lane groups' worth)
+    if len(small) > 2 * n_shards and len(small) >= _BATCH_MIN_LANES:
+        # small-lane layouts pad to their own (smaller) capacity
+        # high-water, and run FULLY GENERIC programs (no promotions,
+        # ``_NO_PROMO``): their total step count is tiny, so one
+        # executable per (geometry, capacity, layout) serving every pool
+        # beats a leaner program per promotion pattern — compile count is
+        # the small-lane cost, not step cost
+        skey = ("small", sig)
+        scap = max(_CAP_SEEN.get(skey, 0),
+                   S._pad_to(max(ln.n for ln in small)))
+        _CAP_SEEN[skey] = scap
+        if not has_scout and len(small) <= n_shards * _BATCH_MAX_PER_SHARD:
+            Bs = -(-len(small) // n_shards)
+            plans.append(_GroupPlan(
+                "batched", sig, _pad_block(small, n_shards * Bs), scap,
+                n_shards, Bs, 1, False, _NO_PROMO,
+            ))
+        else:
+            # one K for the whole pool, snapped to the {4, 16} ladder:
+            # K fragments the executable key, and duplicate-lane padding
+            # of tiny scans is far cheaper than another compile
+            K = _pow2ceil(-(-len(small) // n_shards))
+            K = 4 if K <= 4 else _STACK_MAX_K
+            for i in range(0, len(small), n_shards * K):
+                blk = small[i: i + n_shards * K]
+                plans.append(_GroupPlan(
+                    "stack", sig, _pad_block(blk, n_shards * K), scap,
+                    n_shards, K, k_max, has_scout, _NO_PROMO,
+                ))
+    else:
+        flat = order
 
-    for group in groups:
+    if flat:
+        cap = max(_CAP_SEEN.get(sig, 0),
+                  S._pad_to(max(ln.n for ln in flat)))
+        _CAP_SEEN[sig] = cap
+        G = max(1, min(n_shards, len(flat)))
+        for i in range(0, len(flat), G):
+            plans.append(_GroupPlan(
+                "lane", sig, _pad_block(flat[i: i + G], G), cap,
+                min(G, n_shards), 1, k_max, has_scout, fixed,
+            ))
+        if G < n_shards:
+            # opportunistic width padding: a pool smaller than the device
+            # count compiles at its own size UNLESS the full-width
+            # executable already exists (memory or store) — duplicate
+            # lanes run on otherwise-idle shards, so reusing the wide
+            # program is free and saves the narrow compile
+            p = plans[-1]
+            wide = dataclasses.replace(
+                p, lanes=_pad_block(p.lanes, n_shards),
+                n_shards=n_shards,
+            ).finalize()
+            if wide.key in S._EXEC_CACHE or exec_cache.has(wide.key):
+                plans[-1] = wide
+    return [p.finalize() for p in plans]
+
+
+def _dispatch(plan: _GroupPlan) -> dict:
+    """Stack one plan's arguments, execute it, and scatter lane outputs."""
+    lanes, cap = plan.lanes, plan.cap
+    if plan.variant in ("lane", "stack"):
         tables = LaneTables(
             *(np.stack([np.asarray(getattr(ln.tables_row, f))
-                        for ln in group])
+                        for ln in lanes])
               for f in LaneTables._fields)
         )
-        seeds = np.asarray([ln.seed for ln in group], np.uint32)
+        seeds = np.asarray([ln.seed for ln in lanes], np.uint32)
         txns = S.TxnArrays(
             *(np.stack(cols) for cols in
-              zip(*(_pad_txns(ln.txns, cap) for ln in group)))
+              zip(*(_pad_txns(ln.txns, cap) for ln in lanes)))
         )
-        ncs = np.asarray([ln.n_chunks for ln in group], np.int32)
-        outs, perf = S.run_group(sig, tables, seeds, txns, ncs, k_max,
-                                 has_scout, fixed, len(group))
+        ncs = np.asarray([ln.n_chunks for ln in lanes], np.int32)
+        outs, perf = S.run_group(
+            plan.sig, tables, seeds, txns, ncs, plan.k_max,
+            plan.has_scout, plan.fixed, plan.n_shards,
+            K=(plan.per_shard if plan.variant == "stack" else 0),
+        )
         seen = set()
-        for j, ln in enumerate(group):
+        for j, ln in enumerate(lanes):
             if id(ln) in seen:  # padding duplicate — outputs discarded
                 continue
             seen.add(id(ln))
             ln.out = S.StepOut(*(np.asarray(a)[j] for a in outs))
-        # attribute real lanes; "steps" keeps counting the duplicates'
-        # re-execution — it is the executed-waste metric
-        perf["lanes"] = len(seen)
-        perf_groups.append(perf)
+    else:
+        B = len(lanes)
+        scal = S.BatchScalars(
+            *(np.asarray([np.asarray(getattr(ln.tables_row, name))
+                          for ln in lanes])
+              for name in S._PROMOTABLE),
+            fc_valid=np.stack([np.asarray(ln.tables_row.fc_valid)
+                               for ln in lanes]),
+        )
+        txns = S.TxnArrays(*(
+            np.stack([np.asarray(a) for a in cols], axis=1)
+            for cols in zip(*(_pad_txns(ln.txns, cap) for ln in lanes))
+        ))
+        F0 = np.asarray(lanes[0].tables_row.fc_valid).shape[0]
+        R = np.asarray(lanes[0].tables_row.cmask).shape[-1]
+        W = -(-R // 8)
+        bt = S.BatchTxnTables(
+            mask_words=np.zeros((cap, B, F0, 2, W), np.uint8),
+            hops=np.zeros((cap, B, F0, 2), np.int32),
+            dist=np.zeros((cap, B, F0), np.int32),
+            cand2=np.zeros((cap, B), bool),
+            fc_fixed=np.zeros((cap, B, 2), np.int32),
+        )
+        done = {}
+        for j, ln in enumerate(lanes):
+            key = id(ln)
+            if key not in done:  # dup padding lanes share the pregather
+                done[key] = pregather_node_tables(
+                    ln.tables_row, np.asarray(ln.txns.node)
+                )
+            pg = done[key]
+            n = ln.n
+            bt.mask_words[:n, j] = pg["mask_words"]
+            bt.hops[:n, j] = pg["hops"]
+            bt.dist[:n, j] = pg["dist"]
+            bt.cand2[:n, j] = pg["cand2"]
+            bt.fc_fixed[:n, j] = pg["fc_fixed"]
+        ncs = np.asarray([ln.n_chunks for ln in lanes], np.int32)
+        outs, perf = S.run_batched_group(plan.sig, scal, txns, bt, ncs,
+                                         plan.fixed, plan.n_shards,
+                                         plan.per_shard)
+        seen = set()
+        for j, ln in enumerate(lanes):
+            if id(ln) in seen:
+                continue
+            seen.add(id(ln))
+            ln.out = S.StepOut(*(np.asarray(a)[:, j] for a in outs))
+    perf["lanes"] = len(seen)
+    return perf
+
+
+def _execute_plans(plans: list) -> list:
+    """The overlapped compile/execute pipeline.
+
+    Missing executables are resolved on the background pool — persistent-
+    store loads and XLA backend compiles both release the GIL — while the
+    main thread dispatches groups whose executables are ready.  The
+    GIL-bound half of a compile (tracing + lowering) would fight the
+    dispatching main thread for the interpreter, so it happens HERE, on
+    the main thread, before the dispatch loop (``sim.lower_for_key``);
+    keys the store already holds skip it entirely.  Orders are the cost
+    model's: lowering/compile submission longest-compile-first (the
+    cold-path critical path), dispatch longest-estimated-execute first
+    (warm-path order: big groups keep the devices busy while stragglers'
+    compiles finish).  Time the main thread spends with nothing
+    dispatchable is ``compile_wait_s``; compile wall-clock hidden behind
+    execution is the pipeline's win, ``compile_overlap_s``.
+    """
+    perf = bench.PERF
+    c0 = perf.get("compile_s", 0.0)
+    futures = {}
+    for p in sorted(plans, key=lambda p: -p.est_compile):
+        if p.key in futures or p.key in S._EXEC_CACHE:
+            continue
+        fut = _INFLIGHT.get(p.key)
+        if fut is None:
+            if p.key in _PROC_KEYS and _proc_alive():
+                # delegated to the compile server: poll for its entry
+                fut = _compile_pool().submit(_await_server, p.key)
+            else:
+                lowered = (None if exec_cache.has(p.key)
+                           else S.lower_for_key(p.key))
+                fut = _compile_pool().submit(S.ensure_compiled, p.key,
+                                             lowered)
+            _INFLIGHT[p.key] = fut
+        futures[p.key] = fut
+    pending = sorted(plans, key=lambda p: -p.est_exec)
+    compile_recs = {}  # key -> [seconds, source], claimed by first group
+    wait_s = 0.0
+    perf_groups = []
+    while pending:
+        ready = [p for p in pending
+                 if p.key not in futures or futures[p.key].done()]
+        if not ready:
+            t0 = time.perf_counter()
+            concurrent.futures.wait(
+                {futures[p.key] for p in pending if p.key in futures},
+                return_when=concurrent.futures.FIRST_COMPLETED,
+            )
+            wait_s += time.perf_counter() - t0
+            continue
+        p = ready[0]
+        pending.remove(p)
+        if p.key in futures and p.key not in compile_recs:
+            _, dt, src = futures[p.key].result()
+            compile_recs[p.key] = [dt, src]
+            _INFLIGHT.pop(p.key, None)
+        g = _dispatch(p)
+        rec = compile_recs.get(p.key)
+        if rec is not None and rec[1] != "claimed":
+            dt, src = rec
+            g["cache"] = src
+            if src == "build":
+                g["compile_s"] = round(dt, 3)
+            elif src == "disk":
+                g["load_s"] = round(dt, 3)
+            rec[1] = "claimed"
+        perf_groups.append(g)
+    # attribute the pipeline: compile wall-clock that accrued during this
+    # dispatch pass vs the time the main thread actually stalled on it
+    # (approximate across phase boundaries — background compiles span them)
+    total_compile = perf.get("compile_s", 0.0) - c0
+    perf["compile_wait_s"] = perf.get("compile_wait_s", 0.0) + wait_s
+    perf["compile_overlap_s"] = (
+        perf.get("compile_overlap_s", 0.0)
+        + max(0.0, total_compile - wait_s)
+    )
     return perf_groups
 
 
-def execute_sim_runs(runs: Sequence[tuple]) -> list:
-    """Execute many sweeps as pooled, sharded lane groups.
+def _lower_runs(runs: list) -> tuple:
+    """Lower runs to lanes pooled by (geometry, cost class).
 
-    ``runs``: iterable of ``(cfg, txns, designs, seeds, decompose)`` —
-    ``seeds`` a per-lane tuple.  Returns per-run lists of
-    :class:`~repro.ssd.sim.SimResult`, each bit-identical to
-    ``sim.simulate`` of that lane alone.
-    """
-    runs = list(runs)
-    prepared = []  # (cfg, txns, designs, order, op, n)
+    Returns ``(prepared, pools)`` — ``prepared`` holds per-run
+    ``(cfg, txns, designs, order, op, n)`` for result assembly, ``pools``
+    maps ``(sig, scout)`` to its :class:`_Lane` list."""
+    prepared = []
     pools: dict = {}
     for run_idx, (cfg, txns, designs, seeds, decompose) in enumerate(runs):
         designs = tuple(designs)
@@ -261,24 +628,42 @@ def execute_sim_runs(runs: Sequence[tuple]) -> list:
                 lane_list.append(_Lane(
                     run_idx, i, seed, tables_row, packed, n, None, spec,
                 ))
+    return prepared, pools
 
-    all_groups = []
+
+def execute_sim_runs(runs: Sequence[tuple]) -> list:
+    """Execute many sweeps as pooled, sharded lane groups.
+
+    ``runs``: iterable of ``(cfg, txns, designs, seeds, decompose)`` —
+    ``seeds`` a per-lane tuple.  Returns per-run lists of
+    :class:`~repro.ssd.sim.SimResult`, each bit-identical to
+    ``sim.simulate`` of that lane alone.
+    """
+    runs = list(runs)
+    prepared, pools = _lower_runs(runs)
+    plans = []
     for (sig, scout), lanes in pools.items():
-        all_groups.extend(_run_pool(sig, lanes, scout))
+        plans.extend(_plan_pool(sig, lanes, scout))
+    all_groups = _execute_plans(plans)
 
     # ---- PERF accounting (bench.PERF is the process-wide scoreboard) ----
     perf = bench.PERF
     if all_groups:  # devices actually used, not merely available
         perf["devices_used"] = max(perf.get("devices_used", 0),
                                    max(g["shards"] for g in all_groups))
+    # compile_s / xc_load_s accumulate inside ``sim.ensure_compiled`` (a
+    # background compile counts even if it finishes before any group
+    # adopts its future); groups carry per-group attribution only
     for g in all_groups:
         perf["lanes"] = perf.get("lanes", 0) + g["lanes"]
         perf["scan_steps_padded"] = (
             perf.get("scan_steps_padded", 0) + g["steps"]
         )
-        perf["compile_s"] = perf.get("compile_s", 0.0) + g["compile_s"]
         perf["exec_s"] = perf.get("exec_s", 0.0) + g["exec_s"]
     perf.setdefault("groups", []).extend(all_groups)
+    # mirror the persistent-store telemetry (absolute, process-wide)
+    for k, v in exec_cache.STATS.items():
+        perf[f"xc_{k}"] = v
 
     # ---- merge lanes back into per-run SimResults ----
     results: list = []
@@ -315,10 +700,13 @@ def _request_key(rq: RunRequest) -> tuple:
             rq.seed)
 
 
-def execute_requests(requests: Sequence[RunRequest]) -> list:
-    """Trace + decompose + simulate a batch of workload requests as one
-    planned execution; results are inserted into ``bench._RUN_CACHE`` under
-    the exact keys ``bench.run_workload`` uses."""
+def _sims_for(requests: Sequence[RunRequest]) -> tuple:
+    """Trace + decompose a request batch into planner runs.
+
+    Returns ``(sims, meta)`` with ``sims`` the ``execute_sim_runs`` input
+    and ``meta`` per-request ``(accel, txns)``.  Decompositions go through
+    the content-keyed LRU, so ``precompile`` and the phase body share one
+    pass."""
     from repro.traces.generator import default_n_requests, to_pages, trace_for
 
     sims, meta = [], []
@@ -338,6 +726,14 @@ def execute_requests(requests: Sequence[RunRequest]) -> list:
         seeds = ((rq.seed + 7),) * len(rq.designs)
         sims.append((rq.cfg, txns, rq.designs, seeds, "auto"))
         meta.append((accel, txns))
+    return sims, meta
+
+
+def execute_requests(requests: Sequence[RunRequest]) -> list:
+    """Trace + decompose + simulate a batch of workload requests as one
+    planned execution; results are inserted into ``bench._RUN_CACHE`` under
+    the exact keys ``bench.run_workload`` uses."""
+    sims, meta = _sims_for(requests)
     t0 = time.perf_counter()
     all_results = execute_sim_runs(sims)
     bench.PERF["sim_s"] += time.perf_counter() - t0
@@ -352,6 +748,7 @@ def execute_requests(requests: Sequence[RunRequest]) -> list:
             name=rq.name, cfg=rq.cfg, accel=accel,
             n_requests=txns.n_requests,
             results=dict(zip(rq.designs, results)),
+            origin_phase=bench.PERF.get("phase"),
         )
         bench._lru_put(bench._RUN_CACHE, _request_key(rq), run, cap)
         out.append(run)
@@ -380,3 +777,53 @@ def prefetch(requests: Sequence[RunRequest]) -> None:
     if pending:
         bench.PERF["run_prefetched"] += len(pending)
         execute_requests(pending)
+
+
+def precompile(requests: Sequence[RunRequest],
+               extra_keys: Sequence[tuple] = ()) -> None:
+    """Plan a request batch WITHOUT executing it and start compiling every
+    missing executable — on the out-of-process compile server when the
+    persistent store is configured (in-process background compilation
+    measured a ~2.3x GIL/core-contention tax on small hosts), else on the
+    background thread pool.
+
+    The cross-phase half of the overlapped pipeline: ``benchmarks/run.py``
+    hands the whole preset over before the first phase runs, so a late
+    phase's programs (fig15's fresh geometries, the tail's small-lane
+    layouts via ``extra_keys``) compile while early phases execute.  Costs
+    one planning pass (decompositions land in the shared LRU the phases
+    reuse); dispatch later adopts in-flight futures / published store
+    entries.  Purely a scheduling hint — a wrong or stale hint only means
+    the compile happens at first use, as without it."""
+    pending, seen = [], set()
+    for rq in requests:
+        key = _request_key(rq)
+        if key in seen:
+            continue
+        seen.add(key)
+        if bench._cached_run(*key, count=False) is None:
+            pending.append(rq)
+    plans = []
+    if pending:
+        sims, _ = _sims_for(pending)
+        _, pools = _lower_runs(sims)
+        for (sig, scout), lanes in pools.items():
+            plans.extend(_plan_pool(sig, lanes, scout))
+    keys = [p.key for p in plans] + list(extra_keys)
+    if keys:
+        _schedule_compiles(keys)
+
+
+def prewarm_small_keys(cfg: SSDConfig, n_hint: int,
+                       k_max: int = 1) -> list:
+    """Executable keys of the generic small-lane layout programs a QoS
+    phase will predictably need (static stack, scout stack) for lanes of
+    roughly ``n_hint`` transactions — feed to :func:`precompile` as
+    ``extra_keys``.  A hint, not a commitment."""
+    sig = S._geom_sig(cfg)
+    ns = S.host_device_count()
+    cap = max(_CAP_SEEN.get(("small", sig), 0), S._pad_to(n_hint))
+    return [
+        S.stack_group_key(sig, cap, _STACK_MAX_K, 1, False, _NO_PROMO, ns),
+        S.stack_group_key(sig, cap, 4, k_max, True, _NO_PROMO, ns),
+    ]

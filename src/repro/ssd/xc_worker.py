@@ -1,0 +1,54 @@
+"""Out-of-process compile server for the overlapped pipeline.
+
+``sweep_plan.precompile`` measured in-process background compilation at a
+~2.3x tax on small hosts: tracing fights the dispatcher for the GIL and
+the XLA backend compile fights the executing groups for cores, while the
+``compile_s`` critical path is exactly what the pipeline tries to hide.
+This worker moves the whole compile stream into its own process: it
+receives a pickled list of executable keys (every builder is a pure
+function of its key — see ``sim._fn_for_key``), compiles the missing ones
+longest-first, and publishes them into the persistent store
+(``repro.ssd.exec_cache``), where the parent's dispatch loop adopts them
+the moment the atomic rename lands.  The parent polls the store; if this
+process dies or lags, it falls back to compiling locally — the server is
+a scheduling hint with no correctness surface.
+
+Invoked as ``python -m repro.ssd.xc_worker <keyfile>`` with the parent's
+environment (same XLA_FLAGS/device topology, so the store digests match).
+"""
+from __future__ import annotations
+
+import pickle
+import sys
+
+
+def main() -> None:
+    import os
+
+    with open(sys.argv[1], "rb") as f:
+        keys = pickle.load(f)
+    os.unlink(sys.argv[1])
+    # fresh process: serialization is reliable here, and the parent's
+    # load-time tombstone fallback covers the residual risk — skip the
+    # store-time round-trip verification to publish entries sooner
+    os.environ["REPRO_XC_VERIFY"] = "0"
+    from repro.ssd import exec_cache
+    from repro.ssd import sim as S
+
+    # one compile stream: keys arrive in the parent's need order, so the
+    # earliest-needed programs publish first (a second stream was measured
+    # to DELAY early programs and fight the parent's executing devices for
+    # cores — single-stream-in-need-order wins on small hosts)
+    for key in keys:
+        try:
+            if exec_cache.has(key):
+                continue
+            S.ensure_compiled(key)
+        except Exception as e:  # noqa: BLE001 — skip, parent will compile
+            print(f"[xc_worker] {key[0]} failed: {type(e).__name__}: {e}",
+                  file=sys.stderr, flush=True)
+    exec_cache.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -48,7 +48,7 @@ from repro.traces.generator import (
 
 __all__ = [
     "QueueDepthSweep", "MultiTenantMix", "BurstScale", "run_scenario",
-    "design_metrics", "closed_loop_arrivals",
+    "run_queue_depth_sweeps", "design_metrics", "closed_loop_arrivals",
 ]
 
 DEFAULT_QDS = (1, 2, 4, 8, 16, 32, 64)
@@ -162,51 +162,87 @@ def closed_loop_arrivals(completion_ticks: np.ndarray, qd: int) -> np.ndarray:
     return np.maximum.accumulate(a)
 
 
+def run_queue_depth_sweeps(cfg, scns: Sequence[QueueDepthSweep],
+                           designs: Sequence[str]) -> list:
+    """Round-merged execution of several closed-loop QD sweeps.
+
+    Feedback round ``k`` of EVERY (sweep, design, QD) cell runs as one
+    planner batch: the cells are independent fixed-point iterations, so
+    merging changes nothing about any cell's arrival/completion sequence
+    (bit-identical to running the sweeps one after another — pinned in
+    tests/test_scenarios.py), but the planner sees
+    ``len(scns) * len(designs) * len(qds)`` lanes per round instead of
+    ``len(designs) * len(qds)`` — small-lane groups get fuller and the
+    dispatch-bound tail phase pays the per-round barrier once, not per
+    sweep.  Returns one record per sweep, in order.
+    """
+    designs = tuple(designs)
+    states = []
+    for scn in scns:
+        n_req = scn.n_requests or default_n_requests(scn.workload)
+        base = trace_for(scn.workload, n_req, scn.seed)
+        n = len(base["arrival_us"])
+        keys = [(d, q) for d in designs for q in scn.qds]
+        # saturation bootstrap: round 0 submits everything at t=0
+        # (≡ QD = n); each feedback round re-issues from the previous
+        # completions
+        states.append(dict(
+            scn=scn, base=base, n=n, keys=keys,
+            arrivals={k: np.zeros(n, np.float64) for k in keys},
+            results={}, drift={k: 0.0 for k in keys},
+        ))
+    for r in range(max(max(1, st["scn"].iters) for st in states)):
+        runs, owners = [], []
+        for st in states:
+            if r >= max(1, st["scn"].iters):
+                continue
+            for (d, q) in st["keys"]:
+                tr = dict(st["base"])
+                tr["arrival_us"] = st["arrivals"][(d, q)]
+                runs.append((cfg, _decompose(cfg, tr), (d,),
+                             (st["scn"].seed + 7,), "auto"))
+                owners.append((st, (d, q)))
+        if not runs:
+            break
+        out = _simulate_batch(runs)
+        for (st, key), res in zip(owners, out):
+            st["results"][key] = res[0]
+            nxt = closed_loop_arrivals(res[0].req_completion, key[1])
+            st["drift"][key] = float(
+                np.abs(nxt - st["arrivals"][key]).mean()
+            )
+            st["arrivals"][key] = nxt
+
+    records = []
+    for st in states:
+        scn = st["scn"]
+        tenant_names = tuple(st["base"].get("tenant_names", ()))
+
+        def metrics(d, q, st=st, tenant_names=tenant_names):
+            m = design_metrics(st["results"][(d, q)], tenant_names)
+            # last round's mean arrival residual: distance from the
+            # fixed point
+            m["arrival_drift_us"] = round(st["drift"][(d, q)], 2)
+            return m
+
+        records.append({
+            "scenario": "queue_depth_sweep",
+            "workload": scn.workload,
+            "n_requests": st["n"],
+            "iters": scn.iters,
+            "qds": list(scn.qds),
+            "designs": {
+                d: {str(q): metrics(d, q) for q in scn.qds}
+                for d in designs
+            },
+        })
+    return records
+
+
 def run_queue_depth_sweep(cfg, scn: QueueDepthSweep,
                           designs: Sequence[str]) -> Dict:
-    """Run the closed-loop QD sweep; returns the per-design QoS surface."""
-    designs = tuple(designs)
-    n_req = scn.n_requests or default_n_requests(scn.workload)
-    base = trace_for(scn.workload, n_req, scn.seed)
-    n = len(base["arrival_us"])
-    keys = [(d, q) for d in designs for q in scn.qds]
-    # saturation bootstrap: round 0 submits everything at t=0 (≡ QD = n);
-    # each feedback round then re-issues from the previous completions
-    arrivals = {k: np.zeros(n, np.float64) for k in keys}
-    results: Dict = {}
-    drift = {k: 0.0 for k in keys}
-    for _ in range(max(1, scn.iters)):
-        runs = []
-        for (d, q) in keys:
-            tr = dict(base)
-            tr["arrival_us"] = arrivals[(d, q)]
-            txns = _decompose(cfg, tr)
-            runs.append((cfg, txns, (d,), (scn.seed + 7,), "auto"))
-        out = _simulate_batch(runs)
-        for (d, q), res in zip(keys, out):
-            results[(d, q)] = res[0]
-            nxt = closed_loop_arrivals(results[(d, q)].req_completion, q)
-            drift[(d, q)] = float(np.abs(nxt - arrivals[(d, q)]).mean())
-            arrivals[(d, q)] = nxt
-    tenant_names = tuple(base.get("tenant_names", ()))
-
-    def metrics(d, q):
-        m = design_metrics(results[(d, q)], tenant_names)
-        # last round's mean arrival residual: how far from the fixed point
-        m["arrival_drift_us"] = round(drift[(d, q)], 2)
-        return m
-
-    return {
-        "scenario": "queue_depth_sweep",
-        "workload": scn.workload,
-        "n_requests": n,
-        "iters": scn.iters,
-        "qds": list(scn.qds),
-        "designs": {
-            d: {str(q): metrics(d, q) for q in scn.qds}
-            for d in designs
-        },
-    }
+    """Run one closed-loop QD sweep; returns the per-design QoS surface."""
+    return run_queue_depth_sweeps(cfg, (scn,), designs)[0]
 
 
 # ---------------------------------------------------------------------------

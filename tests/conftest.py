@@ -11,6 +11,21 @@ default run (see pytest.ini).
 # run under (see repro.xla_env).  The single-device environment is covered
 # by the subprocess parity test in tests/test_sweep_plan.py.  MUST run
 # before any jax import: jax locks these on first init.
+#
+# The persistent executable cache (repro.ssd.exec_cache) is pointed at a
+# repo-local dir that SURVIVES pytest sessions: the tier compiles dozens of
+# tiny-geometry programs, and re-runs load them instead (the cache key
+# covers jax/jaxlib versions, XLA flags and the simulator sources, so a
+# code change invalidates exactly the affected entries).  Tests that need
+# cold-cache behaviour point REPRO_XC_DIR elsewhere (tests/test_exec_cache).
+import os as _os
+
+_os.environ.setdefault(
+    "REPRO_XC_DIR",
+    _os.path.join(_os.path.dirname(__file__), "..", ".pytest_cache",
+                  "repro-xc"),
+)
+
 from repro.xla_env import configure as _configure_xla
 
 _configure_xla(device_count=2)

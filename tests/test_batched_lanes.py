@@ -1,0 +1,146 @@
+"""Small-lane layouts: batched (gather-free) and stacked, pinned bit-exact.
+
+PR 3 recorded "vmap-batching lanes is ~50x slower and therefore unused";
+this PR revisits that with the gather-free formulation (one-hot
+compare-and-reduce state lookups, host-side pre-gathered node tables,
+masked-arithmetic validity — see ``sim._make_batched_static_step``).  The
+runner must be bit-identical to the flat unbatched scan for EVERY
+statically-routed design — including nossd, whose live FC selection takes
+the one-hot F-axis path — and the stacked layout (K sequential unbatched
+lanes per shard) must be bit-identical for every design incl. scouts.
+The planner's layout choice is pure policy; these tests force each layout
+regardless of the measured-threshold policy in ``sweep_plan``.
+"""
+import numpy as np
+import pytest
+
+from repro.ssd import DESIGNS, bench, simulate
+from repro.ssd import sim as S
+from repro.ssd import sweep_plan as SP
+from repro.ssd.designs import REGISTRY, KIND_SCOUT
+
+PARITY_FIELDS = ("completion", "wait", "conflict", "hops", "tries",
+                 "misroutes")
+STATIC_DESIGNS = tuple(d for d in DESIGNS
+                       if REGISTRY[d].kind != KIND_SCOUT)
+SCOUT_DESIGNS = tuple(d for d in DESIGNS
+                      if REGISTRY[d].kind == KIND_SCOUT)
+
+
+def _assert_parity(lane, solo, ctx):
+    for f in PARITY_FIELDS:
+        assert np.array_equal(getattr(lane, f), getattr(solo, f)), (ctx, f)
+    assert lane.bus_hold_ticks == solo.bus_hold_ticks, ctx
+    assert lane.link_hold_ticks == solo.link_hold_ticks, ctx
+
+
+def _variants(monkeypatch, layout):
+    """Force every small-lane-eligible pool onto one layout."""
+    monkeypatch.setattr(SP, "SMALL_LANE_MAX_CHUNKS", 64)
+    monkeypatch.setattr(SP, "_BATCH_MIN_LANES", 2)
+    if layout == "batched":
+        monkeypatch.setattr(SP, "_BATCH_MAX_PER_SHARD", 64)
+    else:  # stack only
+        monkeypatch.setattr(SP, "_BATCH_MAX_PER_SHARD", 0)
+
+
+def test_batched_runner_every_static_design(tiny_cfg, tiny_txns,
+                                            monkeypatch):
+    """One batched dispatch spanning ALL statically-routed designs
+    (heterogeneous scalars, pnssd's 2-candidate masks, nossd's dynamic
+    FC) == per-design flat ``simulate``, bit for bit."""
+    _variants(monkeypatch, "batched")
+    g0 = len(bench.PERF["groups"])
+    sweep = S.simulate_sweep(tiny_cfg, tiny_txns, STATIC_DESIGNS, seeds=5,
+                             decompose=False)
+    new = bench.PERF["groups"][g0:]
+    assert {g["variant"] for g in new} == {"batched"}
+    assert len(new) == 1  # the whole static sweep was ONE dispatch
+    for lane, design in zip(sweep, STATIC_DESIGNS):
+        _assert_parity(lane, simulate(tiny_cfg, tiny_txns, design, seed=5),
+                       design)
+
+
+@pytest.mark.parametrize("design", STATIC_DESIGNS)
+def test_batched_runner_per_design_seed_sweep(tiny_cfg, tiny_txns, design,
+                                              monkeypatch):
+    """A homogeneous batch (same design, several seeds) stays bit-exact —
+    covers the promoted/specialized scalar paths per design kind."""
+    _variants(monkeypatch, "batched")
+    lanes = (design,) * 6  # wider than the 2*n_shards small-lane window
+    sweep = S.simulate_sweep(tiny_cfg, tiny_txns, lanes, seeds=(3,) * 6,
+                             decompose=False)
+    solo = simulate(tiny_cfg, tiny_txns, design, seed=3)
+    for lane in sweep:
+        _assert_parity(lane, solo, design)
+
+
+def test_batched_mixed_lengths_masked_tail(tiny_cfg, tiny_txns,
+                                           monkeypatch):
+    """Lanes of different lengths share a batch: the shorter lane's
+    masked tail steps must not perturb it (validity masking == the
+    unbatched cond-skip)."""
+    from repro.ssd.sweep_plan import execute_sim_runs
+
+    _variants(monkeypatch, "batched")
+    short = {k: np.asarray(v)[: len(tiny_txns["arrival"]) // 3]
+             for k, v in dict(tiny_txns).items()}
+    runs = [
+        (tiny_cfg, tiny_txns, ("baseline", "pnssd", "pssd"), (5, 5, 5),
+         False),
+        (tiny_cfg, short, ("nossd", "ideal"), (5, 5), False),
+    ]
+    res_long, res_short = execute_sim_runs(runs)
+    _assert_parity(res_long[0], simulate(tiny_cfg, tiny_txns, "baseline",
+                                         seed=5), "baseline")
+    _assert_parity(res_long[1], simulate(tiny_cfg, tiny_txns, "pnssd",
+                                         seed=5), "pnssd")
+    _assert_parity(res_long[2], simulate(tiny_cfg, tiny_txns, "pssd",
+                                         seed=5), "pssd")
+    _assert_parity(res_short[0], simulate(tiny_cfg, short, "nossd",
+                                          seed=5), "nossd")
+    _assert_parity(res_short[1], simulate(tiny_cfg, short, "ideal",
+                                          seed=5), "ideal")
+
+
+def test_stacked_lanes_every_design(tiny_cfg, tiny_txns, monkeypatch):
+    """The stacked layout (sequential unbatched lanes per shard) is
+    bit-exact for every design, scouts included."""
+    _variants(monkeypatch, "stack")
+    g0 = len(bench.PERF["groups"])
+    sweep = S.simulate_sweep(tiny_cfg, tiny_txns, DESIGNS, seeds=5,
+                             decompose=False)
+    new = bench.PERF["groups"][g0:]
+    assert "stack" in {g["variant"] for g in new}
+    assert len(new) < len(DESIGNS)  # dispatches actually collapsed
+    for lane, design in zip(sweep, DESIGNS):
+        _assert_parity(lane, simulate(tiny_cfg, tiny_txns, design, seed=5),
+                       design)
+
+
+def test_scout_stack_parity_with_kscout(tiny_cfg, tiny_txns, monkeypatch):
+    """Stacked scout lanes with heterogeneous n_scouts (k_max=3 pool):
+    the 1-scout lanes must stay bit-identical to their solo runs."""
+    _variants(monkeypatch, "stack")
+    designs = ("venice", "venice_kscout", "venice_minimal", "venice_hold",
+               "venice", "venice_kscout")
+    sweep = S.simulate_sweep(tiny_cfg, tiny_txns, designs, seeds=9,
+                             decompose=False)
+    for lane, design in zip(sweep, designs):
+        _assert_parity(lane, simulate(tiny_cfg, tiny_txns, design, seed=9),
+                       design)
+
+
+def test_default_policy_collapses_small_pools(tiny_cfg, tiny_txns):
+    """Under the DEFAULT policy (no monkeypatching), a small-lane static
+    pool wider than the batched window still collapses into stacked
+    dispatches — the tail-phase regime."""
+    designs = STATIC_DESIGNS * 3  # 15 small static lanes on 2 shards
+    g0 = len(bench.PERF["groups"])
+    sweep = S.simulate_sweep(tiny_cfg, tiny_txns, designs,
+                             seeds=tuple(range(15)), decompose=False)
+    new = bench.PERF["groups"][g0:]
+    assert len(new) <= 2, [g["variant"] for g in new]
+    for lane, design, seed in zip(sweep, designs, range(15)):
+        _assert_parity(lane, simulate(tiny_cfg, tiny_txns, design,
+                                      seed=seed), design)

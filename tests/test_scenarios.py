@@ -114,6 +114,24 @@ class TestQueueDepthSweep:
         m = out["designs"]["baseline"]["4"]
         assert set(m["tenants"]) == {"prxy_0", "rsrch_0"}
 
+    def test_round_merged_sweeps_identical_to_sequential(self, tiny_cfg):
+        """Round-merging several sweeps into one planner batch per
+        feedback round (the tail-phase dispatch collapse) must be
+        BIT-identical to running the sweeps one after another — the cells
+        are independent fixed-point iterations, merging is scheduling
+        only.  Also covers unequal iteration counts (the shorter sweep
+        stops updating while the longer one keeps iterating)."""
+        from repro.workloads.scenario import run_queue_depth_sweeps
+
+        a = QueueDepthSweep("proj_3", qds=(1, 16), n_requests=60, iters=2)
+        b = QueueDepthSweep("hm_0", qds=(4,), n_requests=40, iters=3,
+                            seed=1)
+        designs = ("baseline", "venice")
+        merged = run_queue_depth_sweeps(tiny_cfg, (a, b), designs)
+        solo = [run_scenario(tiny_cfg, a, designs),
+                run_scenario(tiny_cfg, b, designs)]
+        assert merged == solo
+
 
 class TestMultiTenantAndBurst:
     def test_multi_tenant_fairness_record(self, tiny_cfg):
