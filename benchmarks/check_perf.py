@@ -2,7 +2,10 @@
 
 Compares a fresh ``--smoke`` BENCH_*.json against the committed baseline
 and prints a GitHub Actions ``::warning::`` annotation when ``total_s``
-regresses by more than the threshold.  Always exits 0: CI runner timing is
+regresses by more than the threshold.  Also checks the streaming-engine
+leg's per-window throughput within the fresh run: the last window dropping
+more than the threshold below the first means window prep/compile stopped
+overlapping execution.  Always exits 0: CI runner timing is
 noisy (shared vCPUs), so this is a tripwire for humans, not a gate — real
 perf acceptance happens on the committed quick-preset BENCH artifacts.
 
@@ -61,6 +64,24 @@ def main() -> None:
             if s_old >= 1.0 and s_new > s_old * (1.0 + args.threshold):
                 print(f"::warning title=bench --smoke phase regression::"
                       f"{name}: {s_new:.1f}s vs baseline {s_old:.1f}s")
+        # streaming engine flatness (within the fresh run, no baseline
+        # needed): prep/compile are supposed to hide behind execution, so
+        # a last window markedly slower than steady state means the
+        # pipeline stopped overlapping.  The first nonempty window is
+        # warm-up (one-time executable load) and is skipped.
+        wins = [w for w in (fresh.get("stream") or {}).get("windows", [])
+                if w.get("n_requests")]
+        if len(wins) > 2:
+            wins = wins[1:]  # drop warm-up
+        if len(wins) >= 2:
+            tp_first = float(wins[0]["ios_per_wallclock_s"])
+            tp_last = float(wins[-1]["ios_per_wallclock_s"])
+            if tp_first > 0 and tp_last < tp_first * (1.0 - args.threshold):
+                print(f"::warning title=stream throughput droop::last "
+                      f"window {tp_last:.0f} IO/s vs steady-state window "
+                      f"{tp_first:.0f} IO/s "
+                      f"({tp_last / tp_first:.2f}x, threshold "
+                      f"{1.0 - args.threshold:.2f}x)")
     except Exception as e:  # noqa: BLE001
         print(f"::warning::perf probe skipped: {type(e).__name__}: {e}")
         return

@@ -23,7 +23,7 @@ import json
 import os
 
 PHASE_ORDER = ("fig4_9_10_13", "fig11", "fig12", "fig14", "fig15", "tail",
-               "tab4", "sec31")
+               "stream", "tab4", "sec31")
 
 
 def load_artifacts(results_dir: str) -> list:
@@ -92,6 +92,19 @@ def render(results_dir: str) -> str:
         lines.append("|" + "---|" * len(header))
         for r in rows:
             lines.append("| " + " | ".join(r) + " |")
+        # streaming-engine acceptance surface: per-window simulated-IOs per
+        # wall-clock second of the beyond-budget replay (must stay flat)
+        for name, art in by_preset[preset]:
+            stream = art.get("stream") or {}
+            wins = [w for w in stream.get("windows", [])
+                    if w.get("n_requests")]
+            if wins:
+                per = " ".join(f"w{w['window']}={_fmt(w['ios_per_wallclock_s'], 0)}"
+                               for w in wins)
+                lines.append(
+                    f"- `{name.replace('BENCH_', '').replace('.json', '')}` "
+                    f"stream IO/s per window: {per} (flatness "
+                    f"{_fmt(stream.get('throughput_flatness'), 2)})")
     return "\n".join(lines) + "\n"
 
 

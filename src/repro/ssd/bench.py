@@ -96,6 +96,10 @@ PERF: dict = {
     "xc_hits": 0, "xc_misses": 0, "xc_errors": 0, "xc_stores": 0,
     "xc_tombstones": 0, "xc_load_s": 0.0,
     "compile_overlap_s": 0.0, "compile_wait_s": 0.0,
+    # streaming engine (repro.ssd.stream): windows replayed and wall-clock
+    # spent in the overlapped prep stage (decompose + order + pack) — prep
+    # that hides behind execution shows up here but not in compile_wait_s
+    "stream_windows": 0, "stream_prep_s": 0.0,
     # current figure phase (set by benchmarks/run.py) + per-phase run-cache
     # attribution: {phase: {"hits": n, "from": {origin_phase: n}}}
     "phase": None,

@@ -1,9 +1,11 @@
 """SSD configurations (paper Table 1) and the power model (§6.4/§6.6).
 
 All simulator time is integer *ticks* of 10 ns (``TICK_NS``): every latency in
-Table 1 is a multiple of 10 ns, int32 ticks span ±21 s (our traces span ≪ 1 s
-of arrivals), and integer ticks keep the jitted scan exact with no float64 /
-x64 global-config requirements.
+Table 1 is a multiple of 10 ns, and integer ticks keep the jitted scan exact
+with no float64 / x64 global-config requirements. int32 ticks span ±21 s;
+traces longer than that replay through the chunked streaming engine
+(``ssd/stream.py``), which rebases each window into the int32 budget and
+carries FTL + in-flight simulator state across boundaries bit-exactly.
 """
 from __future__ import annotations
 

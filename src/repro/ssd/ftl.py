@@ -251,6 +251,12 @@ def to_transactions(
     """
     if arr.size == 0:
         arr = np.zeros((0, 5), dtype=np.int64)
+    if arr.size and int(arr[:, 0].max()) > np.iinfo(np.int32).max:
+        raise ValueError(
+            "transaction arrival ticks exceed the int32 budget — replay the "
+            "trace windowed instead (repro.ssd.stream.stream_simulate slices "
+            "it into tick-rebased windows)"
+        )
     order = np.argsort(arr[:, 0], kind="stable")
     arr = arr[order]
     plane = arr[:, 2]
@@ -281,6 +287,8 @@ def decompose_trace(
     precondition: bool = True,
     seed: int = 0,
     engine: str = "auto",
+    resume: "FTL | None" = None,
+    arrival_ticks: np.ndarray | None = None,
 ) -> Transactions:
     """Host trace → page-level transaction arrays for ``repro.ssd.sim``.
 
@@ -293,15 +301,24 @@ def decompose_trace(
     picks vector whenever it applies (preconditioned traces — the vector
     read path is a pure L2P gather, which requires every read to hit a
     mapped page).
+
+    Streaming (``repro.ssd.stream``): ``resume`` is the carried FTL of the
+    previous window — construction *and* preconditioning are skipped, the
+    decomposition continues from the carried L2P/free-block/GC state, and
+    the same object (mutated in place) is handed back on the result.
+    ``arrival_ticks`` overrides the per-request tick computation with
+    precomputed (int64, window-rebased) arrival ticks so window splits use
+    exactly the ticks a monolithic run would have derived from float
+    microseconds.
     """
     if engine not in ("auto", "vector", "scalar"):
         raise ValueError(f"unknown FTL engine {engine!r}")
-    if engine == "vector" and not precondition:
+    if engine == "vector" and not precondition and resume is None:
         raise ValueError(
             "vector FTL engine requires precondition=True "
             "(reads lower to pure L2P gathers)"
         )
-    if engine != "scalar" and precondition:
+    if engine != "scalar" and (precondition or resume is not None):
         from repro.ssd.ftl_engine import decompose_vectorized
 
         return _attach_tenants(decompose_vectorized(
@@ -310,15 +327,20 @@ def decompose_trace(
             footprint_pages,
             overprovision=overprovision,
             seed=seed,
+            resume=resume,
+            arrival_ticks=arrival_ticks,
         ), trace)
-    ftl = FTL(cfg, n_lpns=footprint_pages, overprovision=overprovision)
-    if precondition:
-        # map the whole footprint so reads always hit a valid physical page.
-        # Sequential LPN order preserves spatial locality: consecutive LBAs
-        # share a chunk/chip and nearby chunks share a channel (W-C-D-P), as
-        # they would after a real sequential fill.
-        for lpn in range(footprint_pages):
-            ftl.write_page(lpn, None, 0)
+    if resume is not None:
+        ftl = resume
+    else:
+        ftl = FTL(cfg, n_lpns=footprint_pages, overprovision=overprovision)
+        if precondition:
+            # map the whole footprint so reads always hit a valid physical
+            # page.  Sequential LPN order preserves spatial locality:
+            # consecutive LBAs share a chunk/chip and nearby chunks share a
+            # channel (W-C-D-P), as they would after a real sequential fill.
+            for lpn in range(footprint_pages):
+                ftl.write_page(lpn, None, 0)
 
     arrival = trace["arrival_us"]
     is_read = trace["is_read"]
@@ -326,7 +348,8 @@ def decompose_trace(
     n_pages = trace["n_pages"]
     rows = []  # (ticks, kind, plane, nbytes, req)
     for i in range(len(arrival)):
-        t = us_to_ticks(float(arrival[i]))
+        t = (int(arrival_ticks[i]) if arrival_ticks is not None
+             else us_to_ticks(float(arrival[i])))
         base = int(offset[i])
         for k in range(int(n_pages[i])):
             lpn = (base + k) % footprint_pages

@@ -173,12 +173,27 @@ def decompose_vectorized(
     footprint_pages: int,
     overprovision: float = 1.28,
     seed: int = 0,
+    resume: FTL | None = None,
+    arrival_ticks: np.ndarray | None = None,
 ) -> Transactions:
-    """Vectorized ``decompose_trace`` (preconditioned traces only)."""
-    ftl = FTL(cfg, n_lpns=footprint_pages, overprovision=overprovision)
-    if not _precondition_vectorized(ftl):
-        for lpn in range(footprint_pages):  # tight geometry: oracle's GC
-            ftl.write_page(lpn, None, 0)
+    """Vectorized ``decompose_trace`` (preconditioned traces only).
+
+    ``resume``/``arrival_ticks``: streaming-window continuation — reuse the
+    carried FTL (no construction, no precondition; mutated in place) and
+    take per-request arrival ticks as given (int64, already window-rebased)
+    instead of deriving them from float microseconds.  Splitting a trace at
+    any request boundary and resuming is bit-exact: epochs are deterministic
+    wear-ordered pops, so forcing an epoch boundary at the split changes no
+    allocation, and the carried L2P *is* the pre-window mapping reads
+    forward-fill from.
+    """
+    if resume is not None:
+        ftl = resume
+    else:
+        ftl = FTL(cfg, n_lpns=footprint_pages, overprovision=overprovision)
+        if not _precondition_vectorized(ftl):
+            for lpn in range(footprint_pages):  # tight geometry: oracle's GC
+                ftl.write_page(lpn, None, 0)
     l2p0 = ftl.l2p.copy()  # mapping reads see when no stream write precedes
 
     arrival = np.asarray(trace["arrival_us"], dtype=np.float64)
@@ -186,8 +201,11 @@ def decompose_vectorized(
     offset = np.asarray(trace["offset_page"], dtype=np.int64)
     n_pg = np.asarray(trace["n_pages"], dtype=np.int64)
     n_req = int(len(arrival))
-    # same float64 op sequence as us_to_ticks: (us * 1e3) / TICK_NS, ceil
-    t_req = np.ceil(arrival * 1e3 / TICK_NS).astype(np.int64)
+    if arrival_ticks is not None:
+        t_req = np.asarray(arrival_ticks, dtype=np.int64)
+    else:
+        # same float64 op sequence as us_to_ticks: (us * 1e3) / TICK_NS, ceil
+        t_req = np.ceil(arrival * 1e3 / TICK_NS).astype(np.int64)
 
     # request → page-op expansion (repeat/cumsum, no inner loop)
     T = int(n_pg.sum()) if n_req else 0

@@ -628,6 +628,48 @@ def _make_lane_run(init_state, step, capacity: int):
     return lane_run
 
 
+def _make_lane_run_carry(step, capacity: int):
+    """State-carrying lane runner (the streaming engine's variant).
+
+    Identical scan body to :func:`_make_lane_run`, but the scan state is an
+    *argument* and is returned alongside the output buffer — the streaming
+    engine (``repro.ssd.stream``) threads it across window boundaries
+    (rebased host-side by the window span).  A window run with the zero
+    initial state is bit-identical to the plain runner: same step, same
+    chunking, same skip semantics.
+    """
+
+    def lane_run(sp, state, txns: TxnArrays, n_chunks):
+        def scan_step(st, tx):
+            def real(st):
+                return step(sp, st, tx)
+
+            def skip(st):
+                return st, _skip_out(tx)
+
+            return jax.lax.cond(tx.valid, real, skip, st)
+
+        def chunk_body(c, carry):
+            st, buf = carry
+            off = c * CHUNK
+            txc = jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, off, CHUNK, 0),
+                txns,
+            )
+            st, outs = jax.lax.scan(scan_step, st, txc)
+            buf = jax.tree_util.tree_map(
+                lambda b, o: jax.lax.dynamic_update_slice_in_dim(b, o, off, 0),
+                buf, outs,
+            )
+            return st, buf
+
+        return jax.lax.fori_loop(
+            0, n_chunks, chunk_body, (state, _zero_out(capacity))
+        )
+
+    return lane_run
+
+
 def _step_for(sig: tuple, k_max: int, has_scout: bool, fixed: tuple):
     rows, cols, dies, planes_per_die, scout_hop_ns = sig
     topo = build_mesh(rows, cols)
@@ -665,6 +707,41 @@ def _build_group_fn(sig: tuple, capacity: int, k_max: int,
             jax.tree_util.tree_map(take0, txns), n_chunks[0],
         )
         return jax.tree_util.tree_map(lambda a: a[None], out)
+
+    if n_shards > 1:
+        spec = (P("lanes"),) * 4
+        fn = shard_map(one, mesh=_lane_mesh(n_shards), in_specs=spec,
+                       out_specs=P("lanes"), check_rep=False)
+    else:
+        fn = one
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _build_group_fn_carry(sig: tuple, capacity: int, k_max: int,
+                          has_scout: bool, fixed: tuple, n_shards: int):
+    """State-carrying variant of :func:`_build_group_fn` (``"lanec"``).
+
+    The scan state rides as a per-lane argument and comes back with the
+    outputs, so one executable serves every window of a streamed replay:
+    the streaming engine rebases the returned state host-side and feeds it
+    to the next window's dispatch.  Same shard/squeeze discipline as the
+    plain group fn — the lane stays unbatched inside its shard."""
+    _, step = _step_for(sig, k_max, has_scout, fixed)
+    lane_run = _make_lane_run_carry(step, capacity)
+
+    def one(sp, state, txns, n_chunks):
+        take0 = lambda a: a[0]
+        st, out = lane_run(
+            jax.tree_util.tree_map(take0, sp),
+            jax.tree_util.tree_map(take0, state),
+            jax.tree_util.tree_map(take0, txns), n_chunks[0],
+        )
+        add = lambda a: a[None]
+        return (
+            jax.tree_util.tree_map(add, st),
+            jax.tree_util.tree_map(add, out),
+        )
 
     if n_shards > 1:
         spec = (P("lanes"),) * 4
@@ -987,6 +1064,11 @@ def lane_group_key(sig, capacity, G, k_max, has_scout, fixed, n_shards):
     return ("lane", sig, capacity, G, k_max, has_scout, fixed, n_shards)
 
 
+def lanec_group_key(sig, capacity, G, k_max, has_scout, fixed, n_shards):
+    """State-carrying lane group (the streaming engine's windows)."""
+    return ("lanec", sig, capacity, G, k_max, has_scout, fixed, n_shards)
+
+
 def stack_group_key(sig, capacity, K, k_max, has_scout, fixed, n_shards):
     return ("stack", sig, capacity, K, k_max, has_scout, fixed, n_shards)
 
@@ -1040,15 +1122,40 @@ def _txns_avatar(G: int, capacity: int, n_shards: int,
     )
 
 
+def _state_avatar(sig, G: int, has_scout: bool, n_shards: int):
+    """Shape avatar of the carried scan state (mirrors ``init_state`` in
+    ``_make_step``, with a leading lane axis)."""
+    rows, cols, dies, planes_per_die, _ = sig
+    n_planes = rows * cols * dies * planes_per_die
+    lay = sweep_layout_geom(rows, cols)
+    L = P("lanes")
+    mk = lambda n: _sds((G, n), np.int32, L, n_shards)
+    trip = lambda n: (mk(n), mk(n), mk(n))
+    if not has_scout:
+        return (mk(n_planes), trip(lay.R_pad))
+    return (
+        mk(n_planes),
+        trip(lay.L_pad),
+        trip(lay.rows),
+        trip(lay.n_nodes),
+        _sds((G,), np.uint32, L, n_shards),
+    )
+
+
 def _avatars_for_key(key: tuple):
     kind = key[0]
-    if kind in ("lane", "stack"):
+    if kind in ("lane", "stack", "lanec"):
         _, sig, capacity, n, k_max, has_scout, fixed, n_shards = key
         G = n * n_shards if kind == "stack" else n
         lay = sweep_layout_geom(sig[0], sig[1])
+        second = (
+            _state_avatar(sig, G, has_scout, n_shards)
+            if kind == "lanec"
+            else _sds((G,), np.uint32, P("lanes"), n_shards)
+        )
         return (
             _tables_avatar(lay, G, n_shards),
-            _sds((G,), np.uint32, P("lanes"), n_shards),
+            second,
             _txns_avatar(G, capacity, n_shards),
             _sds((G,), np.int32, P("lanes"), n_shards),
         )
@@ -1084,6 +1191,10 @@ def _fn_for_key(key: tuple):
         _, sig, capacity, G, k_max, has_scout, fixed, n_shards = key
         return _build_group_fn(sig, capacity, k_max, has_scout, fixed,
                                n_shards)
+    if kind == "lanec":
+        _, sig, capacity, G, k_max, has_scout, fixed, n_shards = key
+        return _build_group_fn_carry(sig, capacity, k_max, has_scout, fixed,
+                                     n_shards)
     if kind == "stack":
         _, sig, capacity, K, k_max, has_scout, fixed, n_shards = key
         return _build_stack_fn(sig, capacity, K, k_max, has_scout, fixed,
@@ -1221,6 +1332,83 @@ def run_group(sig: tuple, tables, seeds, txns: TxnArrays, n_chunks,
     )
 
 
+def initial_lane_state(cfg: SSDConfig, has_scout: bool, seed: int):
+    """Host (numpy) zero scan state for one lane — what ``init_state``
+    inside ``_make_step`` builds device-side.  The streaming engine seeds
+    window 0 with this, so window 0 of a streamed replay is bit-identical
+    to the same prefix under :func:`simulate`."""
+    sig = _geom_sig(cfg)
+    lay = sweep_layout_geom(sig[0], sig[1])
+    z = lambda n: np.zeros((n,), np.int32)
+    trip = lambda n: (z(n), z(n), z(n))
+    if not has_scout:
+        return (z(cfg.n_planes), trip(lay.R_pad))
+    return (
+        z(cfg.n_planes),
+        trip(lay.L_pad),
+        trip(lay.rows),
+        trip(lay.n_nodes),
+        np.uint32(seed),
+    )
+
+
+# floor for rebased timestamps: streamed windows re-inject deferred
+# transactions with their original (now negative) frame-shifted arrivals,
+# so the rebase must NOT clamp at 0 — but idle windows would otherwise
+# drift state toward int32 underflow.  Anything at or below the floor is
+# "deep past": the bookkeeping only ever compares such values against
+# candidate starts >= arrivals >= the same floor (the streaming engine
+# guards deferred arrivals against it), and for those comparisons every
+# deep-past value behaves identically.
+REBASE_FLOOR = -(1 << 30)
+
+
+def rebase_lane_state(state, delta_ticks: int):
+    """Shift every timestamp in a carried scan state back by ``delta_ticks``
+    (the window span) — a pure frame change, floored at ``REBASE_FLOOR``.
+
+    The unclamped shift is what makes window-boundary carry bit-exact: the
+    scan's resource bookkeeping (``_gap_avail`` / ``_busy_at`` / commits)
+    is purely relative, so state that reads exactly ``monolithic value
+    minus the accumulated window spans`` — including negative entries for
+    resources still busy from a previous window — reproduces the
+    monolithic run's comparisons verbatim, even for deferred transactions
+    whose rebased arrivals are themselves negative.  The scout RNG word is
+    not a timestamp and rides through untouched."""
+
+    def f(a):
+        a = np.asarray(a)
+        if a.dtype != np.int32:
+            return a  # uint32 rng state
+        return np.maximum(a.astype(np.int64) - int(delta_ticks),
+                          REBASE_FLOOR).astype(np.int32)
+
+    return jax.tree_util.tree_map(f, state)
+
+
+def run_group_carry(sig: tuple, tables, state, txns: TxnArrays, n_chunks,
+                    k_max: int, has_scout: bool, fixed: tuple,
+                    n_shards: int) -> tuple:
+    """Execute one state-carrying lane group (streaming window); returns
+    ``(state' [G, ...], StepOut [G, cap], perf)``.
+
+    Same layout contract as :func:`run_group`, except the per-lane scan
+    state replaces the seeds argument (the scout RNG seed lives inside the
+    state) and comes back rebased-ready for the next window."""
+    ncs = np.asarray(n_chunks, np.int32)
+    G = int(ncs.shape[0])
+    capacity = int(np.asarray(txns.arrival).shape[1])
+    key = lanec_group_key(sig, capacity, G, k_max, has_scout, fixed,
+                          n_shards)
+    outs, perf = _run_compiled(
+        key, (tables, state, txns, ncs), (P("lanes"),) * 4,
+        lanes=G, capacity=capacity, n_shards=n_shards,
+        has_scout=has_scout, steps=int(ncs.sum()),
+    )
+    st, buf = outs
+    return st, buf, perf
+
+
 def run_batched_group(sig: tuple, scal: BatchScalars, txns: TxnArrays,
                       bt: BatchTxnTables, n_chunks, fixed: tuple,
                       n_shards: int, per_shard: int) -> tuple:
@@ -1350,25 +1538,26 @@ def _nominal_order_ref(cfg: SSDConfig, txns) -> np.ndarray:
     return np.argsort(nominal, kind="stable")
 
 
-def _nominal_order(cfg: SSDConfig, txns) -> np.ndarray:
-    """Order transactions by *nominal network-transfer time* (FIFO per plane,
-    zero network contention).  The scan commits resources in this order, so
-    commitments are near-chronological — the property that makes the in-order
-    O(1)-state commit faithful to an event-driven simulator.  A write stuck
-    behind a 100 us tPROG no longer reserves links/buses ahead of thousands
-    of transfers that really happen first.
+def _nominal_times(cfg: SSDConfig, txns, avail0: np.ndarray | None = None):
+    """Nominal per-txn readiness times plus the post-stream per-plane FIFO
+    availability — the carry the streaming engine threads across windows.
 
     Vectorized as a grouped-cumsum pass (bit-exact to
-    :func:`_nominal_order_ref`): per plane, the FIFO recurrence
-    ``avail' = max(arrival, avail) + d`` unrolls to
-    ``avail_k = max(0, max_{j<k}(arrival_j - D_j)) + D_k`` with ``D`` the
-    in-plane exclusive prefix sum of the durations ``d`` — a segmented
-    cumsum plus a segmented running max over plane groups.
+    :func:`_nominal_order_ref` when ``avail0`` is None/zero): per plane, the
+    FIFO recurrence ``avail' = max(arrival, avail) + d`` unrolls to
+    ``avail_k = max(avail0_p, max_{j<k}(arrival_j - D_j)) + D_k`` with ``D``
+    the in-plane exclusive prefix sum of the durations ``d`` — a segmented
+    cumsum plus a segmented running max over plane groups.  ``avail0``
+    generalizes the 0 floor to a carried initial plane availability (>= 0).
+
+    Returns ``(nominal int64 [n], avail_out int64 [n_planes])``.
     """
     arrival = np.asarray(txns["arrival"], dtype=np.int64)
     n = len(arrival)
+    out_avail = (np.zeros((cfg.n_planes,), dtype=np.int64)
+                 if avail0 is None else np.asarray(avail0, np.int64).copy())
     if n == 0:
-        return np.empty((0,), dtype=np.int64)
+        return np.empty((0,), dtype=np.int64), out_avail
     kind = np.asarray(txns["kind"])
     plane = np.asarray(txns["plane"])
     nbytes = np.asarray(txns["nbytes"], dtype=np.int64)
@@ -1395,16 +1584,39 @@ def _nominal_order(cfg: SSDConfig, txns) -> np.ndarray:
     gid = np.cumsum(start) - 1
     span = np.int64(v.max()) - np.int64(v.min()) + 1
     m = np.maximum.accumulate(v + gid * span) - gid * span
-    # exclusive shift within the group; floor 0 = the initial plane_avail
+    # exclusive shift within the group; floor = the initial plane_avail
     m_excl = np.empty(n, dtype=np.int64)
     m_excl[1:] = m[:-1]
     m_excl[start] = 0
-    avail = np.maximum(m_excl, 0) + D
+    avail = np.maximum(m_excl, out_avail[p_s]) + D
     s = np.maximum(a_s, avail)
     nom_s = s + np.where(kind[o] == KIND_READ, np.int64(1 + t_r), 0)
     nominal = np.empty(n, dtype=np.int64)
     nominal[o] = nom_s
+    # each plane group's last element carries the whole group's FIFO end
+    ends = np.flatnonzero(np.concatenate((start[1:], [True])))
+    out_avail[p_s[ends]] = np.maximum(a_s[ends], avail[ends]) + d_s[ends]
+    return nominal, out_avail
+
+
+def _nominal_order(cfg: SSDConfig, txns) -> np.ndarray:
+    """Order transactions by *nominal network-transfer time* (FIFO per plane,
+    zero network contention).  The scan commits resources in this order, so
+    commitments are near-chronological — the property that makes the in-order
+    O(1)-state commit faithful to an event-driven simulator.  A write stuck
+    behind a 100 us tPROG no longer reserves links/buses ahead of thousands
+    of transfers that really happen first.
+    """
+    nominal, _ = _nominal_times(cfg, txns)
     return np.argsort(nominal, kind="stable")
+
+
+def _nominal_order_carry(cfg: SSDConfig, txns, avail0: np.ndarray):
+    """Streaming variant: order the window's transactions with the carried
+    per-plane FIFO availability as the floor; returns ``(order, avail_out)``
+    with ``avail_out`` in the window's (rebased) tick frame."""
+    nominal, avail_out = _nominal_times(cfg, txns, avail0)
+    return np.argsort(nominal, kind="stable"), avail_out
 
 
 def _pack_txns(cfg: SSDConfig, txns, order: np.ndarray):

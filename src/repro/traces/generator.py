@@ -83,19 +83,43 @@ _MAX_SPAN_US = (2**31 - 1) * 10e-3  # ≈ 21.47 s
 
 
 def register_trace(name: str, trace: Dict[str, np.ndarray]) -> None:
-    """Register an ingested trace (canonical byte-trace dict) for replay."""
+    """Register an ingested trace (canonical byte-trace dict) for replay.
+
+    A trace whose arrivals span more than the int32 tick budget (~21 s) is
+    accepted but tagged ``streaming_only``: the streaming engine
+    (``repro.ssd.stream.stream_simulate``) replays it in tick-rebased
+    windows, and closed-loop consumers (QD sweeps) replace arrivals anyway.
+    Only a *monolithic* replay of the full span is refused — at
+    :func:`trace_for` time, naming the streaming path."""
     for key in ("arrival_us", "is_read", "offset_bytes", "size_bytes"):
         if key not in trace:
             raise ValueError(f"trace missing field {key!r}")
     arr = np.asarray(trace["arrival_us"], np.float64)
     span = float(arr[-1] - arr[0]) if len(arr) else 0.0
+    out = dict(trace, name=name)
     if span > _MAX_SPAN_US:
-        raise ValueError(
-            f"trace {name!r} spans {span/1e6:.1f} s of arrivals — beyond "
-            f"the simulator's int32 tick budget ({_MAX_SPAN_US/1e6:.1f} s). "
-            "Slice the trace or rescale its arrivals before registering."
-        )
-    CUSTOM_TRACES[name] = dict(trace, name=name)
+        out["streaming_only"] = True
+    CUSTOM_TRACES[name] = out
+
+
+def _require_monolithic(trace: Dict[str, np.ndarray], name: str) -> None:
+    """Refuse a monolithic replay of a streaming-only span.
+
+    The check re-derives the span from the (possibly sliced) arrivals, so a
+    prefix that fits the budget replays monolithically even when the full
+    registered trace is streaming-only."""
+    arr = np.asarray(trace["arrival_us"], np.float64)
+    span = float(arr[-1] - arr[0]) if len(arr) else 0.0
+    if span <= _MAX_SPAN_US:
+        return
+    raise ValueError(
+        f"trace {name!r} spans {span/1e6:.1f} s of arrivals — beyond the "
+        f"simulator's int32 tick budget ({_MAX_SPAN_US/1e6:.1f} s) for a "
+        "monolithic replay.  Stream it instead: "
+        "repro.ssd.stream.stream_simulate replays it in tick-rebased "
+        "windows (repro.workloads.iter_trace_windows for file-level "
+        "slicing), or slice a fitting prefix via trace_for(name, n)."
+    )
 
 
 def _slice_trace(trace: Dict[str, np.ndarray], n: int | None):
@@ -325,10 +349,19 @@ def to_pages(trace: Dict[str, np.ndarray], page_bytes: int) -> Dict[str, np.ndar
     return pages
 
 
-def trace_for(name: str, n_requests: int, seed: int = 0):
-    """Workload, mix, or registered real trace by name."""
+def trace_for(name: str, n_requests: int, seed: int = 0, *,
+              monolithic: bool = True):
+    """Workload, mix, or registered real trace by name.
+
+    ``monolithic=True`` (every non-streaming consumer) refuses a
+    streaming-only registered trace whose requested slice still exceeds the
+    int32 tick budget; the streaming engine and closed-loop sweeps pass
+    ``monolithic=False``."""
     if name in CUSTOM_TRACES:
-        return _slice_trace(CUSTOM_TRACES[name], n_requests)
+        tr = _slice_trace(CUSTOM_TRACES[name], n_requests)
+        if monolithic and CUSTOM_TRACES[name].get("streaming_only"):
+            _require_monolithic(tr, name)
+        return tr
     if name in MIXES:
         per = max(1, n_requests // len(MIXES[name]))
         return mix_traces(name, per, seed)

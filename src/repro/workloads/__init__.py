@@ -28,9 +28,11 @@ from repro.workloads.characterize import (
     register_workload,
 )
 from repro.workloads.ingest import (
+    arrival_ticks_i64,
     compact_footprint,
     ingest_file,
     iter_trace_csv,
+    iter_trace_windows,
     load_trace,
     sniff_format,
     write_msr_csv,
@@ -39,12 +41,14 @@ from repro.workloads.scenario import (
     BurstScale,
     MultiTenantMix,
     QueueDepthSweep,
+    StreamReplay,
     run_scenario,
 )
 
 __all__ = [
     "WorkloadStats", "WorkloadProfile", "characterize", "register_workload",
-    "register_trace", "compact_footprint", "ingest_file", "iter_trace_csv",
-    "load_trace", "sniff_format", "write_msr_csv", "BurstScale",
-    "MultiTenantMix", "QueueDepthSweep", "run_scenario",
+    "register_trace", "arrival_ticks_i64", "compact_footprint",
+    "ingest_file", "iter_trace_csv", "iter_trace_windows", "load_trace",
+    "sniff_format", "write_msr_csv", "BurstScale", "MultiTenantMix",
+    "QueueDepthSweep", "StreamReplay", "run_scenario",
 ]

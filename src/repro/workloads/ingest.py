@@ -33,20 +33,31 @@ untouched gaps between extents are dropped.
 """
 from __future__ import annotations
 
+import gzip
 import os
 from typing import Dict, Iterator
 
 import numpy as np
 
+from repro.ssd.config import TICK_NS
 from repro.traces.generator import register_trace
 
 __all__ = [
     "sniff_format", "iter_trace_csv", "load_trace", "compact_footprint",
-    "write_msr_csv", "ingest_file",
+    "write_msr_csv", "ingest_file", "arrival_ticks_i64",
+    "iter_trace_windows",
 ]
 
 _FILETIME_PER_US = 10.0  # Windows FILETIME = 100 ns ticks
 _SECTOR = 512
+
+
+def _open_text(path: str):
+    """Text handle for a trace file; ``.gz`` paths stream through gzip
+    transparently (real MSR distributions ship as ``.csv.gz``)."""
+    if path.endswith(".gz"):
+        return gzip.open(path, "rt")
+    return open(path)
 
 
 def _parse_rows_msr(rows: list, base: int | None) -> tuple:
@@ -89,7 +100,7 @@ def _is_header(line: str) -> bool:
 
 def sniff_format(path: str) -> str:
     """``"msr"`` or ``"blktrace"`` from the first data line's shape."""
-    with open(path) as f:
+    with _open_text(path) as f:
         for line in f:
             line = line.strip()
             if not line or _is_header(line):
@@ -127,7 +138,7 @@ def iter_trace_csv(
                 "offset_bytes": off, "size_bytes": size}
 
     rows: list = []
-    with open(path) as f:
+    with _open_text(path) as f:
         for line in f:
             line = line.strip()
             if not line or _is_header(line):
@@ -181,7 +192,10 @@ def load_trace(
     if fmt == "auto":
         fmt = sniff_format(path)
     if name is None:
-        name = os.path.splitext(os.path.basename(path))[0]
+        base = os.path.basename(path)
+        if base.endswith(".gz"):
+            base = base[:-3]
+        name = os.path.splitext(base)[0]
     if batch_requests is None:
         batch_requests = 1 << 62  # one flush == whole file
     batches = list(iter_trace_csv(path, fmt, batch_requests))
@@ -254,3 +268,84 @@ def ingest_file(path: str, fmt: str = "auto", name: str | None = None,
     trace = load_trace(path, fmt=fmt, name=name, compact=compact)
     register_trace(trace["name"], trace)
     return trace["name"]
+
+
+# ---------------------------------------------------------------------------
+# int64 window slicing — the ingestion half of the streaming engine
+# ---------------------------------------------------------------------------
+
+
+def arrival_ticks_i64(arrival_us: np.ndarray) -> np.ndarray:
+    """Absolute int64 arrival ticks from float microseconds.
+
+    The EXACT float64 op sequence of ``repro.ssd.config.us_to_ticks``
+    (``ceil(us * 1e3 / TICK_NS)``) so window-rebased ticks reproduce what a
+    monolithic decomposition would derive — the bit-exactness contract of
+    the streaming engine hangs on this identity."""
+    us = np.asarray(arrival_us, np.float64)
+    return np.ceil(us * 1e3 / TICK_NS).astype(np.int64)
+
+
+def iter_trace_windows(
+    path: str,
+    window_s: float = 10.0,
+    fmt: str = "auto",
+    batch_requests: int = 65536,
+) -> Iterator[Dict[str, np.ndarray]]:
+    """Stream a trace file as fixed-span time windows in bounded memory.
+
+    Rides :func:`iter_trace_csv` (so ``.csv`` and ``.csv.gz`` both work)
+    and regroups its batches by arrival time: each yielded dict carries the
+    canonical raw columns for one ``window_s``-second span plus
+    ``window_index``, ``base_ticks`` (the window's absolute tick origin)
+    and ``arrival_ticks`` (int64, rebased to ``base_ticks`` — each value
+    fits the int32 tick budget by construction).  Empty interior windows
+    are yielded (zero-length arrays) so consumers can hold their
+    window-count invariants; arrivals are assumed nondecreasing (MSR and
+    blktrace logs are time-ordered after ingest normalization).
+    """
+    window_ticks = int(round(window_s * 1e9 / TICK_NS))
+    if window_ticks <= 0:
+        raise ValueError(f"window_s {window_s!r} must be positive")
+
+    cols = ("arrival_us", "is_read", "offset_bytes", "size_bytes")
+    empty = {k: np.zeros(0, np.float64 if k == "arrival_us" else np.int64)
+             for k in cols}
+    empty["is_read"] = np.zeros(0, bool)
+    pend = dict(empty)  # joined not-yet-emitted rows (bounded: <1 window +
+    pend_ticks = np.zeros(0, np.int64)  # 1 batch of rows at any time)
+    widx = 0
+    t0_us: float | None = None
+
+    def cut_window():
+        """Pop window ``widx``'s rows off the pending buffer."""
+        nonlocal pend, pend_ticks, widx
+        hi = (widx + 1) * window_ticks
+        cut = int(np.searchsorted(pend_ticks, hi, side="left"))
+        win = {"window_index": widx,
+               "base_ticks": widx * window_ticks,
+               "arrival_ticks": pend_ticks[:cut] - widx * window_ticks}
+        for k in cols:
+            win[k] = pend[k][:cut]
+        pend = {k: pend[k][cut:] for k in cols}
+        pend_ticks = pend_ticks[cut:]
+        widx += 1
+        return win
+
+    for batch in iter_trace_csv(path, fmt, batch_requests):
+        ts = np.asarray(batch["arrival_us"], np.float64)
+        if len(ts) == 0:
+            continue
+        if t0_us is None:
+            t0_us = float(ts[0])
+        ts = ts - t0_us
+        batch = dict(batch, arrival_us=ts)
+        pend_ticks = np.concatenate((pend_ticks, arrival_ticks_i64(ts)))
+        for k in cols:
+            pend[k] = np.concatenate((pend[k], np.asarray(batch[k])))
+        # every window ending at or before the last seen tick is complete
+        # (arrivals are time-ordered), including empty interior windows
+        while (widx + 1) * window_ticks <= int(pend_ticks[-1]):
+            yield cut_window()
+    if len(pend["arrival_us"]):
+        yield cut_window()

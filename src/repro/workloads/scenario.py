@@ -21,6 +21,9 @@ Sprinkler/PALP argue conflict-resolution mechanisms must be evaluated on:
   interfering tenants removed), and max/min fairness.
 * :class:`BurstScale` — open-loop burst stress: the same trace replayed at
   increasing acceleration factors.
+* :class:`StreamReplay` — windowed replay of traces beyond the int32 tick
+  budget through ``repro.ssd.stream.stream_simulate``: per-design QoS
+  metrics over the full span plus per-window throughput telemetry.
 
 Every scenario lowers to ``repro.ssd.sweep_plan.execute_sim_runs`` batches
 — one planner call per feedback round — so its lanes pool into the same
@@ -47,8 +50,9 @@ from repro.traces.generator import (
 )
 
 __all__ = [
-    "QueueDepthSweep", "MultiTenantMix", "BurstScale", "run_scenario",
-    "run_queue_depth_sweeps", "design_metrics", "closed_loop_arrivals",
+    "QueueDepthSweep", "MultiTenantMix", "BurstScale", "StreamReplay",
+    "run_scenario", "run_queue_depth_sweeps", "run_stream_replay",
+    "design_metrics", "closed_loop_arrivals",
 ]
 
 DEFAULT_QDS = (1, 2, 4, 8, 16, 32, 64)
@@ -81,6 +85,16 @@ class MultiTenantMix:
     workloads: tuple  # constituent workload names (or one Table-3 mix name)
     n_requests_each: int = 300
     target_util: float | None = 1.5
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamReplay:
+    """Windowed replay of a (possibly streaming-only) registered trace."""
+
+    workload: str
+    window_s: float = 10.0
+    n_requests: int | None = None
     seed: int = 0
 
 
@@ -180,7 +194,10 @@ def run_queue_depth_sweeps(cfg, scns: Sequence[QueueDepthSweep],
     states = []
     for scn in scns:
         n_req = scn.n_requests or default_n_requests(scn.workload)
-        base = trace_for(scn.workload, n_req, scn.seed)
+        # closed-loop rounds discard the recorded arrivals (round 0 submits
+        # everything at t=0, later rounds re-issue from completions), so a
+        # streaming-only trace's span never reaches the simulator
+        base = trace_for(scn.workload, n_req, scn.seed, monolithic=False)
         n = len(base["arrival_us"])
         keys = [(d, q) for d in designs for q in scn.qds]
         # saturation bootstrap: round 0 submits everything at t=0
@@ -319,6 +336,40 @@ def run_multi_tenant(cfg, scn: MultiTenantMix,
 
 
 # ---------------------------------------------------------------------------
+# windowed replay of beyond-budget traces
+# ---------------------------------------------------------------------------
+
+
+def run_stream_replay(cfg, scn: StreamReplay,
+                      designs: Sequence[str]) -> Dict:
+    """Replay one workload through the chunked streaming engine."""
+    from repro.ssd.stream import stream_simulate
+
+    designs = tuple(designs)
+    n_req = scn.n_requests or default_n_requests(scn.workload)
+    trace = trace_for(scn.workload, n_req, scn.seed, monolithic=False)
+    tenant_names = tuple(trace.get("tenant_names", ()))
+    t0 = time.perf_counter()
+    sr = stream_simulate(cfg, trace, designs,
+                         seeds=((scn.seed + 7),) * len(designs),
+                         window_s=scn.window_s)
+    bench.PERF["sim_s"] += time.perf_counter() - t0
+    return {
+        "scenario": "stream_replay",
+        "workload": scn.workload,
+        "n_requests": sr.n_requests,
+        "window_s": float(scn.window_s),
+        "n_windows": sr.n_windows,
+        "windows": sr.windows,
+        "throughput_flatness": round(sr.throughput_flatness(), 4),
+        "designs": {
+            d: design_metrics(sr.results[i], tenant_names)
+            for i, d in enumerate(designs)
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
 # burst scaling stress
 # ---------------------------------------------------------------------------
 
@@ -358,4 +409,6 @@ def run_scenario(cfg, scenario, designs: Sequence[str]) -> Dict:
         return run_multi_tenant(cfg, scenario, designs)
     if isinstance(scenario, BurstScale):
         return run_burst_scale(cfg, scenario, designs)
+    if isinstance(scenario, StreamReplay):
+        return run_stream_replay(cfg, scenario, designs)
     raise TypeError(f"unknown scenario {type(scenario).__name__}")

@@ -1,0 +1,263 @@
+"""Chunked streaming engine: window-boundary state-carry pinned bit-exact.
+
+Every test compares a windowed ``stream_simulate`` replay against the
+single-window oracle (monolithic ``decompose_trace`` + ``sim.simulate`` of
+the same trace) — the contract is bit-identity of the per-request surface
+(latencies, completions), the per-transaction completion multiset, the
+resource-hold totals, and the carried FTL state.  The boundary cases the
+tentpole calls out get their own fixtures: GC triggered exactly at a
+window boundary, an in-flight transaction spanning the boundary, and an
+empty window mid-trace.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.ssd import sim as S
+from repro.ssd.config import TICK_NS, perf_optimized
+from repro.ssd.ftl import decompose_trace
+from repro.ssd.stream import stream_simulate, window_ticks_for
+from repro.traces.generator import gen_trace, to_pages
+from repro.workloads import load_trace
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data", "msr_sample.csv")
+
+# FTL state arrays + scalars that must carry bit-exactly across windows
+FTL_STATE = ("l2p", "p2l", "valid", "written", "erase_count", "is_free",
+             "open_block", "next_page")
+FTL_SCALARS = ("_stripe", "gc_events", "gc_page_moves",
+               "read_precond_pages", "read_precond_gc_txns")
+
+
+def _assert_ftl_identical(a, b):
+    for f in FTL_STATE:
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+    for f in FTL_SCALARS:
+        assert getattr(a, f) == getattr(b, f), f
+
+
+def _mono(cfg, trace, design, overprovision=1.28):
+    pages = to_pages(trace, cfg.page_bytes) if "offset_page" not in trace \
+        else trace
+    txns = decompose_trace(cfg, pages, int(pages["footprint_pages"]),
+                           overprovision=overprovision)
+    return txns, S.simulate(cfg, txns, design, seed=0)
+
+
+def _assert_parity(stream_res, mono_res):
+    """Windowed vs monolithic, bit for bit.
+
+    The concatenation of per-window execution batches IS the monolithic
+    nominal order (nominal-time deferral + stable decomposition-order
+    ties), so every per-transaction array compares element-wise — and the
+    float energy reductions, summed in the same element order, match
+    exactly too."""
+    assert np.array_equal(stream_res.completion,
+                          mono_res.completion.astype(np.int64))
+    assert np.array_equal(stream_res.latency,
+                          mono_res.latency.astype(np.int64))
+    assert np.array_equal(stream_res.wait, mono_res.wait)
+    assert np.array_equal(stream_res.conflict, mono_res.conflict)
+    assert np.array_equal(stream_res.hops, mono_res.hops)
+    assert np.array_equal(stream_res.tries, mono_res.tries)
+    assert np.array_equal(stream_res.misroutes, mono_res.misroutes)
+    assert np.array_equal(stream_res.req_latency, mono_res.req_latency)
+    assert np.array_equal(stream_res.req_completion,
+                          mono_res.req_completion)
+    assert stream_res.exec_ticks == mono_res.exec_ticks
+    assert stream_res.bus_hold_ticks == mono_res.bus_hold_ticks
+    assert stream_res.link_hold_ticks == mono_res.link_hold_ticks
+    assert stream_res.flash_energy_j == mono_res.flash_energy_j
+    assert stream_res.transfer_energy_j == mono_res.transfer_energy_j
+    assert stream_res.static_energy_j == mono_res.static_energy_j
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return perf_optimized(rows=2, cols=2, pages_per_block=64)
+
+
+class TestPrefixParity:
+    @pytest.mark.parametrize("design", ["baseline", "venice"])
+    def test_single_window_prefix_bit_identical(self, cfg, design):
+        """A prefix that fits one window replays bit-identically to the
+        monolithic run — same commit order, so even the float energy sums
+        match exactly."""
+        trace = gen_trace("prxy_0", 400, seed=3, footprint_bytes=1 << 20)
+        span_s = float(trace["arrival_us"][-1]) * 1e-6
+        txns, mono = _mono(cfg, trace, design)
+        sr = stream_simulate(cfg, trace, (design,), seeds=0,
+                             window_s=max(2 * span_s, 1.0))
+        assert sr.n_windows == 1
+        r = sr.results[0]
+        assert np.array_equal(r.completion,
+                              mono.completion.astype(np.int64))
+        assert np.array_equal(r.latency, mono.latency.astype(np.int64))
+        assert np.array_equal(r.wait, mono.wait)
+        assert np.array_equal(r.conflict, mono.conflict)
+        assert np.array_equal(r.hops, mono.hops)
+        _assert_parity(r, mono)
+        _assert_ftl_identical(sr.ftl, txns.ftl)
+
+    def test_msr_fixture_windowed_replay(self, cfg):
+        """The bundled real-trace fixture, windowed vs monolithic."""
+        trace = load_trace(FIXTURE)
+        span_s = float(trace["arrival_us"][-1]) * 1e-6
+        txns, mono = _mono(cfg, trace, "venice")
+        sr = stream_simulate(cfg, trace, ("venice",), seeds=0,
+                             window_s=span_s / 4)
+        assert sr.n_windows >= 4
+        _assert_parity(sr.results[0], mono)
+        _assert_ftl_identical(sr.ftl, txns.ftl)
+
+
+class TestBoundaryCarry:
+    def test_multi_window_multi_design(self, cfg):
+        """8-window replay of a synthetic workload, both cost classes
+        (static-routed baseline and scout-routed venice) carried."""
+        trace = gen_trace("prxy_0", 800, seed=3, footprint_bytes=1 << 20)
+        span_s = float(trace["arrival_us"][-1]) * 1e-6
+        sr = stream_simulate(cfg, trace, ("baseline", "venice"), seeds=0,
+                             window_s=span_s / 7)
+        assert sr.n_windows >= 8
+        txns, _ = _mono(cfg, trace, "baseline")
+        for i, design in enumerate(("baseline", "venice")):
+            _assert_parity(sr.results[i],
+                           S.simulate(cfg, txns, design, seed=0))
+        _assert_ftl_identical(sr.ftl, txns.ftl)
+
+    def test_gc_exactly_at_window_boundary(self):
+        """The window edge lands exactly on a GC transaction's arrival
+        tick: the carried FTL must resume mid-GC-pressure (free-block
+        state, wear ordering, epoch split) bit-exactly."""
+        cfg = perf_optimized(rows=2, cols=2, pages_per_block=16)
+        trace = gen_trace("prxy_0", 2500, seed=5, footprint_bytes=1 << 20)
+        pages = to_pages(trace, cfg.page_bytes)
+        txns = decompose_trace(cfg, pages, int(pages["footprint_pages"]),
+                               overprovision=3.0)
+        assert txns.ftl.gc_events > 100  # the recipe really does GC
+        t = np.asarray(txns["arrival"], np.int64)
+        gc_ticks = t[np.asarray(txns["req"]) < 0]
+        span = int(t.max())
+        # a GC arrival near mid-trace becomes the window boundary
+        t_gc = int(gc_ticks[np.argmin(np.abs(gc_ticks - span // 2))])
+        assert 0 < t_gc < span
+        window_s = t_gc * TICK_NS * 1e-9
+        assert window_ticks_for(window_s) == t_gc  # boundary ON the GC txn
+        sr = stream_simulate(cfg, trace, ("venice",), seeds=0,
+                             window_s=window_s, overprovision=3.0)
+        assert sr.n_windows >= 2
+        _assert_parity(sr.results[0], S.simulate(cfg, txns, "venice",
+                                                 seed=0))
+        _assert_ftl_identical(sr.ftl, txns.ftl)
+
+    def test_inflight_transaction_spans_boundary(self, cfg):
+        """A same-plane read backlog still in service when the window ends:
+        the carried occupancy must delay the next window's requests by
+        exactly the residual, and the spanning completions land past the
+        boundary."""
+        W_s = 0.001  # 1 ms windows
+        W = window_ticks_for(W_s)
+        n0, n1 = 40, 10
+        # dense same-offset reads just before the boundary, then more on
+        # the same plane right after it — all serialized through one plane
+        arrival = np.concatenate([
+            990.0 + 0.2 * np.arange(n0),  # [990 us, 998 us)
+            1000.0 + 0.2 * np.arange(n1),  # just past the boundary
+        ])
+        n = n0 + n1
+        trace = {
+            "name": "t_span",
+            "arrival_us": arrival,
+            "is_read": np.ones(n, bool),
+            "offset_bytes": np.zeros(n, np.int64),
+            "size_bytes": np.full(n, 4096, np.int64),
+            "footprint_bytes": 1 << 20,
+        }
+        txns, mono = _mono(cfg, trace, "venice")
+        sr = stream_simulate(cfg, trace, ("venice",), seeds=0,
+                             window_s=W_s)
+        assert sr.n_windows >= 2
+        assert sr.windows[0]["n_requests"] == n0
+        # the backlog really does span the cut: part of window 0's arrivals
+        # commit nominally past the boundary, so they are re-injected into
+        # window 1's batch (n_txns conserved, window 1 executing more than
+        # its own arrivals) and the completions land past the boundary
+        assert sr.windows[1]["n_txns"] > n1
+        assert sum(w["n_txns"] for w in sr.windows) == len(mono.completion)
+        assert int(sr.results[0].completion.max()) > W
+        # ... and the carried residual reproduces the monolithic run
+        _assert_parity(sr.results[0], mono)
+        _assert_ftl_identical(sr.ftl, txns.ftl)
+
+    def test_empty_window_mid_trace(self, cfg):
+        """A silent interior window: decompose/dispatch skip it, but the
+        carried state still ages by the window span."""
+        rng = np.random.default_rng(7)
+        arrival = np.concatenate([
+            np.sort(rng.uniform(0.0, 0.3e6, 120)),  # [0, 0.3 s)
+            np.sort(rng.uniform(1.2e6, 1.4e6, 80)),  # [1.2 s, 1.4 s)
+        ])
+        n = len(arrival)
+        trace = {
+            "name": "t_gap",
+            "arrival_us": arrival,
+            "is_read": rng.uniform(size=n) < 0.7,
+            "offset_bytes": (rng.integers(0, 200, n) * 4096).astype(
+                np.int64),
+            "size_bytes": np.full(n, 4096, np.int64),
+            "footprint_bytes": 1 << 20,
+        }
+        txns, mono = _mono(cfg, trace, "venice")
+        sr = stream_simulate(cfg, trace, ("venice",), seeds=0,
+                             window_s=0.5)
+        assert sr.n_windows == 3
+        assert [w["n_requests"] for w in sr.windows] == [120, 0, 80]
+        assert sr.windows[1]["n_txns"] == 0
+        _assert_parity(sr.results[0], mono)
+        _assert_ftl_identical(sr.ftl, txns.ftl)
+
+
+class TestPipeline:
+    def test_compile_wait_flat_after_first_window(self, cfg):
+        """Steady state is execution-bound: every window after the first
+        reuses the same lanec executable (capacity high-water bucketing),
+        so the per-window compile wait collapses to ~0."""
+        trace = gen_trace("prxy_0", 800, seed=3, footprint_bytes=1 << 20)
+        span_s = float(trace["arrival_us"][-1]) * 1e-6
+        sr = stream_simulate(cfg, trace, ("venice",), seeds=0,
+                             window_s=span_s / 7)
+        assert sr.n_windows >= 8
+        for w in sr.windows[1:]:
+            assert w["compile_wait_s"] < 0.05, w
+        assert sr.throughput_flatness() > 0.0
+
+    def test_window_guard_rejects_beyond_budget_spans(self):
+        with pytest.raises(ValueError, match="tick budget"):
+            window_ticks_for(30.0)  # > int32 minus headroom
+        with pytest.raises(ValueError, match="tick budget"):
+            window_ticks_for(0.0)
+
+    def test_stream_replay_scenario(self, cfg):
+        """End-to-end through the scenario engine: a streaming-only
+        registered trace replays by name via StreamReplay."""
+        from repro.traces.generator import CUSTOM_TRACES, register_trace
+        from repro.workloads import StreamReplay, run_scenario
+
+        tr = dict(gen_trace("hm_0", 120, seed=11))
+        a = np.asarray(tr["arrival_us"], np.float64)
+        tr["arrival_us"] = a * (60e6 / max(float(a[-1]), 1.0))  # 60 s span
+        register_trace("test_stream60", tr)
+        try:
+            assert CUSTOM_TRACES["test_stream60"]["streaming_only"] is True
+            rec = run_scenario(cfg, StreamReplay("test_stream60",
+                                                 window_s=10.0),
+                               ("venice",))
+        finally:
+            del CUSTOM_TRACES["test_stream60"]
+        assert rec["scenario"] == "stream_replay"
+        assert rec["n_windows"] >= 6
+        assert rec["n_requests"] == 120
+        assert sum(w["n_requests"] for w in rec["windows"]) == 120
+        assert rec["designs"]["venice"]["n_requests"] == 120

@@ -127,22 +127,80 @@ class TestIngestion:
         full = trace_for(name, None)
         assert len(full["arrival_us"]) == 600
 
-    def test_register_rejects_traces_beyond_tick_budget(self):
-        """Arrivals past the int32 tick budget (~21 s) would wrap negative
-        in the transaction arrays — registration must refuse, not corrupt."""
+    def test_beyond_budget_traces_register_as_streaming_only(self):
+        """Arrivals past the int32 tick budget (~21 s) register fine, but
+        tagged streaming-only: a *monolithic* replay of the full span (which
+        would wrap the transaction arrays negative) must refuse and point at
+        the streaming path; a prefix that fits the budget, or any consumer
+        that opted into streaming, goes through."""
         from repro.traces.generator import register_trace
 
         week = {
             "name": "test_week",
-            "arrival_us": np.array([0.0, 7 * 86400e6]),  # a week apart
-            "is_read": np.ones(2, bool),
-            "offset_bytes": np.zeros(2, np.int64),
-            "size_bytes": np.full(2, 4096, np.int64),
+            "arrival_us": np.array([0.0, 1.0, 7 * 86400e6]),  # a week apart
+            "is_read": np.ones(3, bool),
+            "offset_bytes": np.zeros(3, np.int64),
+            "size_bytes": np.full(3, 4096, np.int64),
             "footprint_bytes": 1 << 20,
         }
-        with pytest.raises(ValueError, match="tick budget"):
-            register_trace("test_week", week)
-        assert "test_week" not in CUSTOM_TRACES
+        register_trace("test_week", week)
+        assert CUSTOM_TRACES["test_week"]["streaming_only"] is True
+        with pytest.raises(ValueError, match="tick budget") as ei:
+            trace_for("test_week", None)
+        # the error must route users to the streaming engine, not dead-end
+        assert "stream_simulate" in str(ei.value)
+        # a fitting prefix is an ordinary monolithic replay
+        prefix = trace_for("test_week", 2)
+        assert len(prefix["arrival_us"]) == 2
+        # streaming consumers opt out of the span check entirely
+        full = trace_for("test_week", None, monolithic=False)
+        assert len(full["arrival_us"]) == 3
+
+    def test_windowed_ingest_covers_the_trace(self):
+        """iter_trace_windows cuts the stream into contiguous tick-rebased
+        windows: indices dense (empty interior windows included), rebased
+        ticks within the window span, absolute ticks reassembling to the
+        whole-file ingest."""
+        from repro.workloads import arrival_ticks_i64, iter_trace_windows
+
+        whole = load_trace(FIXTURE, compact=False)
+        t_abs = arrival_ticks_i64(whole["arrival_us"])
+        span_s = float(whole["arrival_us"][-1]) * 1e-6
+        wins = list(iter_trace_windows(FIXTURE, window_s=span_s / 5,
+                                       batch_requests=64))
+        assert [w["window_index"] for w in wins] == list(range(len(wins)))
+        assert len(wins) >= 5
+        W = wins[1]["base_ticks"] - wins[0]["base_ticks"]
+        rebuilt = np.concatenate(
+            [w["arrival_ticks"] + w["base_ticks"] for w in wins])
+        assert np.array_equal(rebuilt, t_abs)
+        for w in wins:
+            if len(w["arrival_ticks"]):
+                assert 0 <= w["arrival_ticks"][0]
+                assert w["arrival_ticks"][-1] < W
+        off = np.concatenate([w["offset_bytes"] for w in wins])
+        assert np.array_equal(off, whole["offset_bytes"])
+
+    def test_gzip_csv_pinned_to_uncompressed(self, tmp_path):
+        """A .csv.gz ingests identically to the uncompressed file — format
+        sniffing, streamed batches, and the registered trace all pinned."""
+        import gzip
+        import shutil
+
+        gz = tmp_path / "msr_sample.csv.gz"
+        with open(FIXTURE, "rb") as src, gzip.open(gz, "wb") as dst:
+            shutil.copyfileobj(src, dst)
+        assert sniff_format(str(gz)) == "msr"
+        plain = load_trace(FIXTURE)
+        zipped = load_trace(str(gz))
+        assert zipped["name"] == "msr_sample"  # .gz stripped from the stem
+        for k in ("arrival_us", "is_read", "offset_bytes", "size_bytes"):
+            assert np.array_equal(plain[k], zipped[k]), k
+        assert plain["footprint_bytes"] == zipped["footprint_bytes"]
+        whole = load_trace(FIXTURE, compact=False)
+        batches = list(iter_trace_csv(str(gz), batch_requests=64))
+        streamed_off = np.concatenate([b["offset_bytes"] for b in batches])
+        assert np.array_equal(streamed_off, whole["offset_bytes"])
 
 
 class TestCharacterize:
