@@ -60,6 +60,8 @@ import numpy as np
 
 from repro.ssd import DESIGNS as ALL_DESIGNS
 from repro.ssd import bench, cost_optimized, perf_optimized
+from repro.ssd import sim
+from repro.ssd import sweep_plan
 from repro.ssd.bench import geomean, run_workload
 from repro.ssd.sweep_plan import (
     RunRequest,
@@ -406,6 +408,13 @@ def main() -> None:
                     choices=("auto", "vector", "scalar"),
                     help="trace-decomposition engine (scalar = the "
                          "page-at-a-time oracle, for FTL-pipeline A/Bs)")
+    ap.add_argument("--lane-backend", default=None,
+                    choices=("xla", "pallas", "pallas-interpret", "auto"),
+                    help="lane-step kernel for batched static groups "
+                         "(default: REPRO_LANE_BACKEND or xla) — lets a "
+                         "--smoke leg A/B the Pallas kernel against the "
+                         "one-hot XLA step without code edits; every "
+                         "backend is bit-exact")
     ap.add_argument("--json", nargs="?", const="", default=None,
                     metavar="PATH",
                     help="write a BENCH_*.json perf-trajectory artifact "
@@ -415,6 +424,8 @@ def main() -> None:
         raise SystemExit("--smoke and --full are mutually exclusive")
 
     bench.FTL_ENGINE = args.ftl_engine
+    if args.lane_backend is not None:
+        sim.LANE_BACKEND = args.lane_backend
     if args.smoke:
         designs = _parse_designs(args.designs or ",".join(SMOKE_DESIGNS))
         workloads = SMOKE_WL
@@ -580,6 +591,20 @@ def main() -> None:
             "compile_s_total": round(bench.PERF["compile_s"], 3),
             "exec_s_total": round(bench.PERF["exec_s"], 3),
             "groups": bench.PERF["groups"],
+            # kernel-dispatch split: which lane-step kernel each group ran
+            # (xla / pallas-interpret / pallas-compiled) and the share of
+            # lane-steps served by the batched static runner
+            "kernel_dispatch": {
+                "lane_backend": sim.resolve_lane_backend(),
+                "planner_profile": sweep_plan.planner_profile(),
+                "backends": bench.PERF["kernel_backends"],
+                "steps_batched": bench.PERF["steps_batched"],
+                "steps_unbatched": bench.PERF["steps_unbatched"],
+                "batched_share": round(
+                    bench.PERF["steps_batched"]
+                    / max(bench.PERF["steps_batched"]
+                          + bench.PERF["steps_unbatched"], 1), 4),
+            },
             # accelerated-replay audit: per-(workload, config) scale factor
             # and offered utilization (satellite — previously dropped)
             "accel": bench.PERF["accel"],

@@ -48,18 +48,33 @@ def _fmt(v, nd=1):
     return f"{float(v):.{nd}f}"
 
 
+def _kernel_split(art: dict) -> tuple:
+    """("batched%", "backend") cells from the ``kernel_dispatch`` block;
+    pre-PR-7 artifacts lack it and render as "-"."""
+    kd = art.get("kernel_dispatch")
+    if not kd:
+        return "-", "-"
+    share = kd.get("batched_share")
+    share_s = "-" if share is None else f"{100.0 * float(share):.0f}%"
+    backends = kd.get("backends") or {}
+    be_s = ("-" if not backends else
+            " ".join(f"{k}:{v}" for k, v in sorted(backends.items())))
+    return share_s, be_s
+
+
 def rows_for(arts: list) -> tuple:
     """(header, rows) of the trajectory table for one preset's artifacts."""
     phases = [p for p in PHASE_ORDER
               if any(p in (a.get("phases") or {}) for _, a in arts)]
     header = (["artifact", "total_s", "ftl_s", "sim_s", "compile_s",
-               "exec_s", "groups", "cache_hits(xc)"]
+               "exec_s", "groups", "cache_hits(xc)", "batched%", "kernels"]
               + [f"{p}_s" for p in phases])
     rows = []
     for name, art in arts:
         ph = art.get("phases") or {}
         xc = art.get("exec_cache") or {}
         groups = art.get("groups")
+        share_s, be_s = _kernel_split(art)
         rows.append(
             [name.replace("BENCH_", "").replace(".json", ""),
              _fmt(art.get("total_s")), _fmt(art.get("ftl_s_total"), 2),
@@ -67,7 +82,7 @@ def rows_for(arts: list) -> tuple:
              _fmt(art.get("compile_s_total"), 2),
              _fmt(art.get("exec_s_total"), 2),
              str(len(groups)) if isinstance(groups, list) else "-",
-             str(xc.get("hits", "-"))]
+             str(xc.get("hits", "-")), share_s, be_s]
             + [_fmt((ph.get(p) or {}).get("s")) for p in phases]
         )
     return header, rows
@@ -84,7 +99,10 @@ def render(results_dir: str) -> str:
                  "benchmarks.trajectory`.  Ordering: `generated_at`, then "
                  "file mtime, then name.  Wall-clock fields are seconds; "
                  "`cache_hits(xc)` counts executables served from the "
-                 "persistent AOT store (warm runs).")
+                 "persistent AOT store (warm runs); `batched%` is the share "
+                 "of lane-steps run by the batched static step and `kernels` "
+                 "the per-backend group counts (xla / pallas-interpret / "
+                 "pallas-compiled).")
     for preset in sorted(by_preset):
         header, rows = rows_for(by_preset[preset])
         lines += ["", f"## preset: {preset}", ""]

@@ -1,3 +1,13 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the simulator's two hot paths.
+
+- ``scout_step`` / ``ref`` / ``ops``: the Algorithm-1 scout routing step
+  (one DFS decision per scout per call) — Pallas kernel, gather-based
+  jnp oracle, and the jitted batched-DFS driver around them.
+- ``batched_step``: the lane-tiled wrapper that runs the batched static
+  step from ``ssd.sim`` as a ``pl.pallas_call`` (lanes on the grid,
+  pre-gathered node tables in per-instance blocks).
+- ``onehot``: gather-free one-hot compare-and-reduce lookups shared by
+  the XLA and Pallas paths.
+- ``backend``: interpret-mode selection (Pallas has no CPU compiler, so
+  CPU runs interpret=True; accelerators compile).
+"""

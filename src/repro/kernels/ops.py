@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.topology import MeshTopology
+from repro.kernels.backend import default_interpret
 from repro.kernels.ref import scout_step_ref
 from repro.kernels.scout_step import LINK_PAD, STATE_W, pack_tables, scout_step_pallas
 
@@ -39,11 +40,18 @@ def _pad_b(x, b_tile):
 def make_route_batch(
     topo: MeshTopology,
     use_pallas: bool = True,
-    interpret: bool = True,
+    interpret: bool | None = None,
     b_tile: int = 256,
     allow_nonminimal: bool = True,
 ):
-    """Build a jitted ``(src, dst, busy0, seeds) -> BatchRouteOut``."""
+    """Build a jitted ``(src, dst, busy0, seeds) -> BatchRouteOut``.
+
+    ``interpret=None`` (the default) picks interpreter mode from the
+    actual JAX backend — compiled on GPU/TPU, interpreted on CPU — so
+    the kernel is never silently interpreted on a real accelerator.
+    Pass ``True``/``False`` to force either mode.
+    """
+    interpret = default_interpret(interpret)
     tables = jnp.asarray(pack_tables(topo))
     n_nodes = topo.n_nodes
     n_pad = tables.shape[0]

@@ -37,6 +37,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.topology import MeshTopology
+from repro.kernels.backend import default_interpret
 
 RIGHT, UP, LEFT, DOWN = 0, 1, 2, 3
 LINK_PAD = 128  # lane-aligned link bitmap (8x8 mesh has 112 links)
@@ -203,15 +204,17 @@ def scout_step_pallas(
     cols: int,
     n_nodes: int,
     allow_nonminimal: bool = True,
-    interpret: bool = True,
+    interpret: bool | None = None,
     b_tile: int = B_TILE,
 ):
     """Run one Algorithm-1 step for a batch of scouts via pallas_call.
 
     state [B, 8] int32; busy [B, LINK_PAD] int32 (0/1); tried [B, 4*N_pad]
     int32 (0/1); tables from ``pack_tables``.  B must be a multiple of
-    ``b_tile`` (pad with dummy scouts).
+    ``b_tile`` (pad with dummy scouts).  ``interpret=None`` resolves from
+    the actual JAX backend (compiled on GPU/TPU, interpreted on CPU).
     """
+    interpret = default_interpret(interpret)
     B = state.shape[0]
     assert B % b_tile == 0, "pad the scout batch to a multiple of b_tile"
     T = tried.shape[1]

@@ -100,6 +100,13 @@ PERF: dict = {
     # spent in the overlapped prep stage (decompose + order + pack) — prep
     # that hides behind execution shows up here but not in compile_wait_s
     "stream_windows": 0, "stream_prep_s": 0.0,
+    # kernel-dispatch split (ISSUE 7): per-backend group counts
+    # ({"xla"|"pallas-interpret"|"pallas-compiled": n}) and how many
+    # lane-steps ran through the batched static step vs the unbatched
+    # scan — the backend/batching share surfaced in BENCH_*.json's
+    # ``kernel_dispatch`` block and the trajectory table
+    "kernel_backends": {},
+    "steps_batched": 0, "steps_unbatched": 0,
     # current figure phase (set by benchmarks/run.py) + per-phase run-cache
     # attribution: {phase: {"hits": n, "from": {origin_phase: n}}}
     "phase": None,

@@ -166,6 +166,13 @@ REGISTRY: dict[str, DesignSpec] = {
 DESIGNS = tuple(REGISTRY)
 
 
+def static_design_names(names: Sequence[str] = DESIGNS) -> tuple:
+    """The statically-routed designs among ``names`` — every design whose
+    lane the batched runner (and its Pallas lane kernel) can serve; the
+    complement is the scout-routed set, which needs the DFS scan."""
+    return tuple(n for n in names if REGISTRY[n].kind != KIND_SCOUT)
+
+
 class SweepLayout(NamedTuple):
     """Static padded sizes of the unified resource space for one config."""
 

@@ -44,6 +44,7 @@ NoSSD's buffered wormhole modeled as transient circuits per packet phase.
 from __future__ import annotations
 
 import functools
+import os
 import threading
 import time
 from typing import NamedTuple, Sequence
@@ -73,6 +74,34 @@ __all__ = [
 
 _BIG = np.int32(2**30)
 _MAX_TRIES = 64  # scout retry bound per reservation
+
+# Lane-step kernel backend for the batched static runner.  "xla" keeps
+# the one-hot XLA step (the CPU default — interpret-mode Pallas lowers
+# to the same ops plus per-step call scaffolding, so on CPU it is pure
+# overhead); "pallas" compiles the lane-tiled pallas_call from
+# ``kernels.batched_step`` (GPU/TPU), degrading honestly to
+# "pallas-interpret" on CPU where Pallas has no compiler; "auto" picks
+# pallas on an accelerator and xla on CPU.  Settable via the
+# REPRO_LANE_BACKEND env var or ``benchmarks/run.py --lane-backend``.
+LANE_BACKEND = os.environ.get("REPRO_LANE_BACKEND", "xla")
+_LANE_BACKENDS = ("xla", "pallas", "pallas-interpret", "auto")
+_ACCEL_BACKENDS = ("gpu", "tpu", "cuda", "rocm")
+
+
+def resolve_lane_backend(setting: str | None = None) -> str:
+    """Resolve ``setting`` (default: module ``LANE_BACKEND``) to a concrete
+    backend name — "xla", "pallas" (compiled) or "pallas-interpret" —
+    for the JAX backend actually in use."""
+    s = setting if setting is not None else LANE_BACKEND
+    if s not in _LANE_BACKENDS:
+        raise ValueError(
+            f"unknown lane backend {s!r}; pick from {_LANE_BACKENDS}")
+    on_accel = jax.default_backend() in _ACCEL_BACKENDS
+    if s == "auto":
+        return "pallas" if on_accel else "xla"
+    if s == "pallas" and not on_accel:
+        return "pallas-interpret"
+    return s
 
 KIND_READ, KIND_WRITE, KIND_ERASE = 0, 1, 2
 
@@ -1021,11 +1050,19 @@ def _make_batched_run(step, capacity: int, n_planes: int, R: int):
 
 @functools.lru_cache(maxsize=None)
 def _build_batched_fn(sig: tuple, capacity: int, fixed: tuple,
-                      n_shards: int, per_shard: int):
+                      n_shards: int, per_shard: int,
+                      backend: str = "xla"):
     rows, cols, dies, planes_per_die, _ = sig
     lay = sweep_layout_geom(rows, cols)
     n_planes = rows * cols * dies * planes_per_die
     step = _make_batched_static_step(lay, n_planes, fixed)
+    if backend != "xla":
+        # lane-tiled Pallas wrapper around the SAME step closure: the
+        # kernel body is the step itself, so the pallas path is bit-exact
+        # by construction (and pinned so by tests/test_batched_pallas.py)
+        from repro.kernels.batched_step import lane_tiled_step
+
+        step = lane_tiled_step(step, interpret=(backend != "pallas"))
     brun = _make_batched_run(step, capacity, n_planes, lay.R_pad)
 
     if n_shards > 1:
@@ -1073,8 +1110,23 @@ def stack_group_key(sig, capacity, K, k_max, has_scout, fixed, n_shards):
     return ("stack", sig, capacity, K, k_max, has_scout, fixed, n_shards)
 
 
-def batched_group_key(sig, capacity, per_shard, fixed, n_shards):
-    return ("batched", sig, capacity, per_shard, fixed, n_shards)
+def batched_group_key(sig, capacity, per_shard, fixed, n_shards,
+                      backend: str = "xla"):
+    # the default XLA backend keeps the historical 6-tuple so warm-path
+    # store entries stay stable; pallas variants are distinct programs
+    # and carry the backend as a 7th element
+    if backend == "xla":
+        return ("batched", sig, capacity, per_shard, fixed, n_shards)
+    return ("batched", sig, capacity, per_shard, fixed, n_shards, backend)
+
+
+def kernel_backend_of_key(key: tuple) -> str:
+    """Which lane-step kernel a group key dispatches to: "xla" for all
+    unbatched variants and the default batched program, else the pallas
+    flavor recorded in the key ("pallas-compiled" / "pallas-interpret")."""
+    if key[0] == "batched" and len(key) > 6:
+        return "pallas-compiled" if key[6] == "pallas" else key[6]
+    return "xla"
 
 
 _TABLE_SCALAR_DTYPES = dict(
@@ -1159,7 +1211,7 @@ def _avatars_for_key(key: tuple):
             _txns_avatar(G, capacity, n_shards),
             _sds((G,), np.int32, P("lanes"), n_shards),
         )
-    _, sig, capacity, per_shard, fixed, n_shards = key
+    _, sig, capacity, per_shard, fixed, n_shards = key[:6]
     B = per_shard * n_shards
     lay = sweep_layout_geom(sig[0], sig[1])
     F0, R = lay.F_pad, lay.R_pad
@@ -1199,8 +1251,10 @@ def _fn_for_key(key: tuple):
         _, sig, capacity, K, k_max, has_scout, fixed, n_shards = key
         return _build_stack_fn(sig, capacity, K, k_max, has_scout, fixed,
                                n_shards)
-    _, sig, capacity, per_shard, fixed, n_shards = key
-    return _build_batched_fn(sig, capacity, fixed, n_shards, per_shard)
+    _, sig, capacity, per_shard, fixed, n_shards = key[:6]
+    backend = key[6] if len(key) > 6 else "xla"
+    return _build_batched_fn(sig, capacity, fixed, n_shards, per_shard,
+                             backend)
 
 
 def lower_for_key(key: tuple):
@@ -1295,14 +1349,27 @@ def _run_compiled(key: tuple, args: tuple, specs: tuple, *, lanes: int,
     t0 = time.perf_counter()
     outs = jax.device_get(compiled(*args))
     exec_s = time.perf_counter() - t0
+    kb = kernel_backend_of_key(key)
     perf = {
         "variant": key[0], "lanes": lanes, "capacity": capacity,
         "shards": n_shards, "scout": has_scout,
         "steps": steps * CHUNK, "cache": src,
+        "kernel_backend": kb,
         "compile_s": round(dt if src == "build" else 0.0, 3),
         "load_s": round(dt if src == "disk" else 0.0, 3),
         "exec_s": round(exec_s, 3),
     }
+    from repro.ssd import bench
+
+    # kernel-dispatch scoreboard: which backend ran, and how many
+    # lane-steps went through the batched step vs the unbatched scan
+    # (the lock: the streaming engine executes groups off-thread)
+    with _TALLY_LOCK:
+        bench.PERF["kernel_backends"][kb] = (
+            bench.PERF["kernel_backends"].get(kb, 0) + 1)
+        share_key = ("steps_batched" if key[0] == "batched"
+                     else "steps_unbatched")
+        bench.PERF[share_key] += steps * CHUNK
     return outs, perf
 
 
@@ -1411,13 +1478,16 @@ def run_group_carry(sig: tuple, tables, state, txns: TxnArrays, n_chunks,
 
 def run_batched_group(sig: tuple, scal: BatchScalars, txns: TxnArrays,
                       bt: BatchTxnTables, n_chunks, fixed: tuple,
-                      n_shards: int, per_shard: int) -> tuple:
+                      n_shards: int, per_shard: int,
+                      backend: str = "xla") -> tuple:
     """Execute one batched static group; returns (StepOut [cap, B], perf).
 
     ``txns``/``bt`` are time-major numpy trees [cap, B, ...]; ``scal`` and
     ``n_chunks`` carry the [B] lane axis.  Executed steps are charged at
     the per-shard max chunk count (the masked tail of shorter lanes is the
-    batch's padding waste, kept visible in ``steps``).
+    batch's padding waste, kept visible in ``steps``).  ``backend`` picks
+    the lane-step kernel (a resolved name from
+    :func:`resolve_lane_backend`); every backend is bit-exact.
     """
     B = int(np.asarray(n_chunks).shape[0])
     capacity = int(np.asarray(txns.arrival).shape[0])
@@ -1427,7 +1497,8 @@ def run_batched_group(sig: tuple, scal: BatchScalars, txns: TxnArrays,
         * per_shard for s in range(max(1, n_shards))
     )
     return _run_compiled(
-        batched_group_key(sig, capacity, per_shard, fixed, n_shards),
+        batched_group_key(sig, capacity, per_shard, fixed, n_shards,
+                          backend),
         (scal, txns, bt, ncs),
         (P("lanes"), P(None, "lanes"), P(None, "lanes"), P("lanes")),
         lanes=B, capacity=capacity, n_shards=n_shards, has_scout=False,

@@ -112,6 +112,37 @@ _BATCH_MIN_LANES = 3  # fewer small lanes than this stay on the flat path
 _BATCH_MAX_PER_SHARD = 4  # fork/join cliff (measured; see above)
 _STACK_MAX_K = 16  # lanes executed sequentially per shard, at most
 
+# ---- planner backend profile (DESIGN.md §2.2, Pallas lane layouts) -------
+# "cpu" is the layout above: one unbatched lane per host core, batching
+# only inside the measured small-lane window.  On an accelerator that
+# inverts — one device wants thousands of batched lanes, and the CPU
+# fork/join cliff does not exist — so the "occupancy" profile pools
+# statically-routed lanes by occupancy (lanes x padded scan chunks per
+# device, budget below) instead of core count and dispatches them through
+# the batched runner (Pallas lane kernel when the lane backend says so).
+# "auto" picks occupancy on GPU/TPU and cpu otherwise, which keeps the
+# CPU profile — and every figure output — byte-identical by default.
+# Scout pools keep the cpu layout under every profile: the batched step
+# cannot serve the scout DFS (stretch goal, see ROADMAP item 5).
+PLANNER_PROFILE = os.environ.get("REPRO_PLANNER_PROFILE", "auto")
+_PROFILES = ("cpu", "occupancy", "auto")
+
+# occupancy budget: padded scan chunks (lanes x chunks) a single device
+# should carry per dispatch before the planner cuts a new group
+OCCUPANCY_CHUNKS = int(os.environ.get("REPRO_OCCUPANCY_CHUNKS", "4096"))
+
+
+def planner_profile() -> str:
+    """Resolve PLANNER_PROFILE to "cpu" or "occupancy" for this process."""
+    p = PLANNER_PROFILE
+    if p not in _PROFILES:
+        raise ValueError(f"unknown planner profile {p!r}; pick from {_PROFILES}")
+    if p != "auto":
+        return p
+    import jax
+
+    return "occupancy" if jax.default_backend() in S._ACCEL_BACKENDS else "cpu"
+
 # background compile pool for the overlapped compile/execute pipeline: on
 # an n-core host, n-1 workers compile while the main thread dispatches
 # already-compiled groups (XLA compilation releases the GIL).
@@ -307,6 +338,7 @@ class _GroupPlan:
     k_max: int
     has_scout: bool
     fixed: tuple
+    backend: str = "xla"  # lane-step kernel for "batched" plans
     key: tuple = None
     est_exec: float = 0.0
     est_compile: float = 0.0
@@ -323,7 +355,7 @@ class _GroupPlan:
         else:
             self.key = S.batched_group_key(self.sig, self.cap,
                                            self.per_shard, self.fixed,
-                                           self.n_shards)
+                                           self.n_shards, self.backend)
         # cost model (ordering heuristics only): scout programs compile
         # several times slower than static ones (the nested scout
         # while-loops); execute cost scales with scheduled scan chunks
@@ -344,7 +376,51 @@ def _pad_block(block: list, size: int) -> list:
 
 
 def _plan_pool(sig: tuple, lanes: list, has_scout: bool) -> list:
-    """Lay one (geometry, cost class) pool out as dispatchable groups.
+    """Lay one (geometry, cost class) pool out as dispatchable groups,
+    under the active planner backend profile (:func:`planner_profile`).
+
+    Scout pools always use the cpu layout — the batched runner cannot
+    serve the scout DFS — so the profile only redistributes the
+    statically-routed lanes."""
+    if not has_scout and planner_profile() == "occupancy":
+        return _plan_pool_occupancy(sig, lanes)
+    return _plan_pool_cpu(sig, lanes, has_scout)
+
+
+def _plan_pool_occupancy(sig: tuple, lanes: list) -> list:
+    """Accelerator layout for a statically-routed pool: every lane runs in
+    the batched runner, grouped by occupancy — lanes x padded scan chunks
+    per device, cut at OCCUPANCY_CHUNKS — rather than core count.  Lanes
+    are length-sorted first, so a group's padded cost is its width times
+    its longest (last) member and mixed-length pools don't pay a long
+    lane's padding across every short one.  Bit-exact vs the cpu layout:
+    the batched step's masked-validity path makes the extra padding a
+    no-op, pinned by tests/test_batched_pallas.py.
+    """
+    n_shards = S.host_device_count()
+    order = sorted(lanes, key=lambda ln: ln.n_chunks)
+    cap = max(_CAP_SEEN.get(sig, 0), S._pad_to(max(ln.n for ln in order)))
+    _CAP_SEEN[sig] = cap
+    backend = S.resolve_lane_backend()
+    budget = max(1, OCCUPANCY_CHUNKS) * n_shards
+    plans, i = [], 0
+    while i < len(order):
+        j = i + 1
+        while (j < len(order)
+               and (j - i + 1) * max(order[j].n_chunks, 1) <= budget):
+            j += 1
+        blk = order[i:j]
+        i = j
+        per = -(-len(blk) // n_shards)
+        plans.append(_GroupPlan(
+            "batched", sig, _pad_block(blk, n_shards * per), cap,
+            n_shards, per, 1, False, _NO_PROMO, backend=backend,
+        ))
+    return [p.finalize() for p in plans]
+
+
+def _plan_pool_cpu(sig: tuple, lanes: list, has_scout: bool) -> list:
+    """The host-CPU layout of one (geometry, cost class) pool.
 
     Big lanes: one UNBATCHED lane per device shard, sorted by length (the
     sorted-length grouping keeps a group's barrier cheap).  Small lanes
@@ -382,6 +458,7 @@ def _plan_pool(sig: tuple, lanes: list, has_scout: bool) -> list:
             plans.append(_GroupPlan(
                 "batched", sig, _pad_block(small, n_shards * Bs), scap,
                 n_shards, Bs, 1, False, _NO_PROMO,
+                backend=S.resolve_lane_backend(),
             ))
         else:
             # one K for the whole pool, snapped to the {4, 16} ladder:
@@ -490,7 +567,7 @@ def _dispatch(plan: _GroupPlan) -> dict:
         ncs = np.asarray([ln.n_chunks for ln in lanes], np.int32)
         outs, perf = S.run_batched_group(plan.sig, scal, txns, bt, ncs,
                                          plan.fixed, plan.n_shards,
-                                         plan.per_shard)
+                                         plan.per_shard, plan.backend)
         seen = set()
         for j, ln in enumerate(lanes):
             if id(ln) in seen:

@@ -16,6 +16,7 @@ from repro.kernels.scout_step import (
     umod,
     xorshift32_i32,
 )
+from repro.ssd.designs import DESIGNS, KIND_SCOUT, REGISTRY
 
 
 def _mk_batch(topo, B, density, seed):
@@ -96,6 +97,55 @@ def test_xorshift_matches_python():
     got = np.asarray(xorshift32_i32(jnp.asarray(xs))).astype(np.uint32)
     want = np.array([xorshift32_py(int(x) & 0xFFFFFFFF) for x in xs], np.uint32)
     assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("design", DESIGNS)
+def test_kernel_ref_parity_per_design(design):
+    """jnp-reference vs Pallas-interpret parity under each registered
+    design's routing knobs.  Statically-routed designs never walk the
+    mesh — their scout degenerates to a dst == src (zero-length) walk —
+    so their batches pin the degenerate path; scout designs pin their
+    ``allow_nonminimal`` setting over a half-busy mesh."""
+    spec = REGISTRY[design]
+    topo = build_mesh(8, 8)
+    tables = jnp.asarray(pack_tables(topo))
+    B = 128
+    state, busy, tried = _mk_batch(topo, B, 0.5, DESIGNS.index(design) + 11)
+    if spec.kind != KIND_SCOUT:
+        state[:, 1] = state[:, 0]  # degenerate walk: already at destination
+    got = scout_step_pallas(
+        jnp.asarray(state), jnp.asarray(busy), jnp.asarray(tried), tables,
+        cols=8, n_nodes=64, allow_nonminimal=spec.allow_nonminimal,
+        interpret=True, b_tile=64,
+    )
+    want = scout_step_ref(
+        jnp.asarray(state), jnp.asarray(busy), jnp.asarray(tried),
+        tables[:64, 0:4], tables[:64, 4:8], 8,
+        allow_nonminimal=spec.allow_nonminimal,
+    )
+    for g, w, name in zip(got, want, ["state", "busy", "tried"]):
+        assert np.array_equal(np.asarray(g), np.asarray(w)), (design, name)
+    if spec.kind != KIND_SCOUT:
+        assert (np.asarray(got[0])[:, 4] == 2).all(), design  # all arrived
+
+
+def test_kernel_degenerate_dst_eq_src_is_noop():
+    """A scout already at its destination must arrive (flags == 2) without
+    moving, claiming a link, or burning RNG state."""
+    topo = build_mesh(4, 4)
+    tables = jnp.asarray(pack_tables(topo))
+    state, busy, tried = _mk_batch(topo, 64, 0.7, 21)
+    state[:, 1] = state[:, 0]
+    got = scout_step_pallas(
+        jnp.asarray(state), jnp.asarray(busy), jnp.asarray(tried), tables,
+        cols=4, n_nodes=16, interpret=True, b_tile=64,
+    )
+    s = np.asarray(got[0])
+    assert (s[:, 4] == 2).all()  # flags: arrived
+    assert np.array_equal(s[:, 0], state[:, 0])  # no movement
+    assert np.array_equal(s[:, 3], state[:, 3])  # RNG untouched
+    assert np.array_equal(np.asarray(got[1]), busy)
+    assert np.array_equal(np.asarray(got[2]), tried)
 
 
 @pytest.mark.parametrize("use_pallas", [False, True])
