@@ -81,7 +81,7 @@ N_REQ_QUICK = 2500
 SMOKE_WL = ["hm_0"]
 SMOKE_DESIGNS = ("baseline", "venice")
 N_REQ_SMOKE = 240
-SMOKE_PHASES = ("fig4_9_10_13", "tail", "stream", "tab4", "sec31")
+SMOKE_PHASES = ("fig4_9_10_13", "tail", "stream", "faults", "tab4", "sec31")
 
 # bundled anonymized MSR-format trace (tests/data, <50 KB): the real-trace
 # leg of the tail phase and the ingestion tests share this fixture
@@ -325,6 +325,40 @@ def stream_replay(csv_dir, designs, smoke=False):
     return rec
 
 
+def fault_degradation(csv_dir, designs, smoke=False):
+    """Degraded-mode leg (ISSUE 8): the same workload replayed under
+    growing per-channel link-fault counts; exports each design's
+    throughput retention (``iops_ok`` vs its own fault-free run) and
+    permanent-failure rate into ``fault_degradation.csv`` + the
+    ``faults`` key of BENCH_*.json.  The acceptance asymmetry: Venice's
+    adaptive DFS routes around dead links while a shared-bus design
+    loses the whole channel."""
+    from repro.workloads.scenario import DegradedModeSweep, run_scenario
+
+    cfg = perf_optimized()
+    counts = (0, 1, 2) if smoke else (0, 1, 2, 4, 8)
+    rec = run_scenario(
+        cfg,
+        DegradedModeSweep("hm_0", fault_counts=counts,
+                          placement="per_channel",
+                          n_requests=(240 if smoke else 800)),
+        designs,
+    )
+    rows = []
+    for d, curve in rec["designs"].items():
+        for k, m in curve.items():
+            rows.append([rec["workload"], rec["placement"], d, k,
+                         m["iops_ok"], m["retention"], m["failure_pct"]])
+        worst = curve[str(counts[-1])]
+        print(f"[faults] {d}: retention@{counts[-1]}"
+              f"={worst['retention']:.3f} "
+              f"failures={worst['failure_pct']:.1f}%")
+    _rows_to_csv(os.path.join(csv_dir, "fault_degradation.csv"),
+                 ["workload", "placement", "design", "failed_links",
+                  "iops_ok", "retention", "failure_pct"], rows)
+    return rec
+
+
 def tab4_overheads(csv_dir):
     """Analytic reproduction of Table 4 / §6.6 arithmetic."""
     router_mw = 0.241
@@ -398,7 +432,7 @@ def main() -> None:
                     help="CI probe: 1 workload x 2 designs, core phases only")
     ap.add_argument("--only", default=None,
                     help="fig4|fig9|fig11|fig12|fig14|fig15|tail|stream|"
-                         "tab4|sec31")
+                         "faults|tab4|sec31")
     ap.add_argument("--csv", default="results")
     ap.add_argument("--n-req", type=int, default=None)
     ap.add_argument("--designs", default=None, metavar="D1,D2,...",
@@ -530,6 +564,10 @@ def main() -> None:
     if want("stream"):
         stream_record = phase("stream", stream_replay, args.csv, designs,
                               smoke=args.smoke)
+    fault_record = None
+    if want("faults"):
+        fault_record = phase("faults", fault_degradation, args.csv, designs,
+                             smoke=args.smoke)
     if want("tab4"):
         phase("tab4", tab4_overheads, args.csv)
     if want("sec31"):
@@ -611,6 +649,20 @@ def main() -> None:
             # QoS surface: per-design p50/p95/p99 + per-tenant fairness
             # from the tail phase's scenarios
             "tail": tail_records,
+            # self-healing compile pipeline + store health (ISSUE 8): the
+            # persistent-store counters again (including tombstones and
+            # version-skew-induced misses) next to the compile-server
+            # watchdog's trip/fallback accounting
+            "xc_health": {
+                **{k: int(exec_cache.STATS[k]) for k in
+                   ("hits", "misses", "errors", "stores", "tombstones")},
+                "watchdog_trips": bench.PERF["xc_watchdog_trips"],
+                "watchdog_fallbacks": bench.PERF["xc_watchdog_fallbacks"],
+                "watchdog_reason": bench.PERF["xc_watchdog_reason"],
+            },
+            # degraded-mode fault sweep: per-design throughput retention
+            # under growing per-channel link faults
+            "faults": fault_record,
             # streaming engine: per-window throughput of the beyond-budget
             # replay (acceptance: flat, compile_wait ~0 after window 1)
             "stream": stream_record,

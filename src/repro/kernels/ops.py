@@ -43,6 +43,7 @@ def make_route_batch(
     interpret: bool | None = None,
     b_tile: int = 256,
     allow_nonminimal: bool = True,
+    dead_links=None,
 ):
     """Build a jitted ``(src, dst, busy0, seeds) -> BatchRouteOut``.
 
@@ -50,8 +51,18 @@ def make_route_batch(
     actual JAX backend — compiled on GPU/TPU, interpreted on CPU — so
     the kernel is never silently interpreted on a real accelerator.
     Pass ``True``/``False`` to force either mode.
+
+    ``dead_links`` (bool [n_links] or None) bakes a failed-link mask into
+    the router: dead links look permanently busy to every scout — the DFS
+    routes around them — and are excluded from the returned ``path_mask``
+    (a scout never reserves a dead link).  None or all-False is the
+    fault-free router, bit-identical to omitting the argument.
     """
     interpret = default_interpret(interpret)
+    dead_row = None
+    if dead_links is not None and np.any(dead_links):
+        dead_row = jnp.asarray(np.asarray(dead_links, bool)[None, :],
+                               jnp.int32)
     tables = jnp.asarray(pack_tables(topo))
     n_nodes = topo.n_nodes
     n_pad = tables.shape[0]
@@ -81,6 +92,10 @@ def make_route_batch(
 
     @jax.jit
     def route(src, dst, busy0, seeds):
+        if dead_row is not None:
+            # dead links join the global reservation state, so path_mask
+            # (reserved minus initially-busy) can never include them
+            busy0 = (busy0.astype(jnp.int32) | dead_row).astype(busy0.dtype)
         B = src.shape[0]
         Bp = B + ((-B) % b_tile)
         state = jnp.zeros((Bp, STATE_W), jnp.int32)

@@ -96,6 +96,12 @@ PERF: dict = {
     "xc_hits": 0, "xc_misses": 0, "xc_errors": 0, "xc_stores": 0,
     "xc_tombstones": 0, "xc_load_s": 0.0,
     "compile_overlap_s": 0.0, "compile_wait_s": 0.0,
+    # self-healing compile pipeline (ISSUE 8): compile-server watchdog
+    # trips (heartbeat loss / straggler / crash — see
+    # ``sweep_plan._ServerWatchdog``), the reason of the last trip, and
+    # how many delegated keys fell back to in-process compilation
+    "xc_watchdog_trips": 0, "xc_watchdog_reason": None,
+    "xc_watchdog_fallbacks": 0,
     # streaming engine (repro.ssd.stream): windows replayed and wall-clock
     # spent in the overlapped prep stage (decompose + order + pack) — prep
     # that hides behind execution shows up here but not in compile_wait_s

@@ -166,6 +166,82 @@ REGISTRY: dict[str, DesignSpec] = {
 DESIGNS = tuple(REGISTRY)
 
 
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Hardware faults injected into a lowered design (ISSUE 8).
+
+    All faults are named in the *mesh* frame (link ids from
+    :func:`repro.core.topology.build_mesh`, router = mesh node, FC = channel
+    row) and each design's lowering maps them onto its own resource
+    structure — a dead horizontal link in row ``r`` kills the whole shared
+    bus ``r`` for bus designs but only one hop for mesh designs, which is
+    the degraded-mode asymmetry the fault model exists to measure.
+
+    Read-retry (``retry_*``) models the chip-level latency tail of marginal
+    NAND reads: each read on an afflicted chip independently retries with
+    probability ``retry_prob`` per ladder rung, adding the rung's ticks.
+    It is applied host-side to transaction op times (deterministic per
+    ``retry_seed``) so every design sees the identical extended reads.
+
+    An all-default (empty) FaultSpec lowers to all-False masks and is
+    bit-identical to the fault-free path by construction.
+    """
+
+    failed_links: tuple = ()    # mesh link ids
+    failed_routers: tuple = ()  # mesh node ids — every port of the node dies
+    failed_fcs: tuple = ()      # flash-controller ids (channel rows)
+    retry_chips: tuple = ()     # chip/node ids with read-retry; () = none
+    retry_prob: float = 0.0     # per-rung retry probability for reads
+    retry_ladder: tuple = ()    # extra ticks per successive retry rung
+    retry_seed: int = 0         # deterministic retry draw stream
+
+    def __post_init__(self) -> None:
+        for f in ("failed_links", "failed_routers", "failed_fcs",
+                  "retry_chips"):
+            object.__setattr__(
+                self, f, tuple(sorted({int(x) for x in getattr(self, f)}))
+            )
+        object.__setattr__(
+            self, "retry_ladder", tuple(int(x) for x in self.retry_ladder)
+        )
+        if not (0.0 <= self.retry_prob <= 1.0):
+            raise ValueError(f"retry_prob must be in [0,1], got {self.retry_prob}")
+        if any(t < 0 for t in self.retry_ladder):
+            raise ValueError("retry_ladder ticks must be >= 0")
+
+    @property
+    def hw_faulty(self) -> bool:
+        return bool(self.failed_links or self.failed_routers or self.failed_fcs)
+
+    @property
+    def retry_active(self) -> bool:
+        return self.retry_prob > 0.0 and bool(self.retry_ladder)
+
+    def __bool__(self) -> bool:
+        return self.hw_faulty or self.retry_active
+
+    def dead_sets(self, topo: MeshTopology) -> tuple[set, set]:
+        """(dead mesh link ids, dead FC ids) — routers expand to their ports."""
+        for l in self.failed_links:
+            if not 0 <= l < topo.n_links:
+                raise ValueError(f"failed link {l} out of range [0,{topo.n_links})")
+        for n in self.failed_routers:
+            if not 0 <= n < topo.n_nodes:
+                raise ValueError(f"failed router {n} out of range [0,{topo.n_nodes})")
+        for f in self.failed_fcs:
+            if not 0 <= f < topo.rows:
+                raise ValueError(f"failed FC {f} out of range [0,{topo.rows})")
+        dead_links = set(self.failed_links)
+        for n in self.failed_routers:
+            dead_links.update(
+                int(l) for l in topo.port_link[n] if l >= 0
+            )
+        return dead_links, set(self.failed_fcs)
+
+
+NO_FAULTS = FaultSpec()
+
+
 def static_design_names(names: Sequence[str] = DESIGNS) -> tuple:
     """The statically-routed designs among ``names`` — every design whose
     lane the batched runner (and its Pallas lane kernel) can serve; the
@@ -234,10 +310,56 @@ class LaneTables(NamedTuple):
     dist: jnp.ndarray  # int32 [D, F_pad, n_nodes] — FC->chip distance
     fc_valid: jnp.ndarray  # bool [D, F_pad]
     fc_node: jnp.ndarray  # int32 [D, F_pad] — mesh injection node per FC
+    res_dead: jnp.ndarray  # bool [D, R_pad] — failed-resource mask (ISSUE 8)
+
+
+def _fault_mask(topo: MeshTopology, lay: SweepLayout, spec: DesignSpec,
+                faults: FaultSpec | None) -> tuple[np.ndarray, set]:
+    """Lower mesh-frame faults onto one design's resource vector.
+
+    Returns ``(res_dead [R_pad] bool, dead_fcs)``.  Shared-bus designs
+    inherit a fault anywhere on the structure the bus replaces: a dead
+    horizontal link in row ``r`` (or FC ``r``) kills bus ``r`` outright,
+    which is exactly the "one fault strands the channel" cliff Venice's
+    path diversity avoids.  Vertical links / routers have no bus analogue
+    (chan="row" buses have neither) and are ignored there.
+    """
+    res_dead = np.zeros((lay.R_pad,), dtype=bool)
+    if faults is None or not faults.hw_faulty:
+        return res_dead, set()
+    dead_links, dead_fcs = faults.dead_sets(topo)
+    rows, cols = lay.rows, lay.cols
+    n_h = rows * (cols - 1)  # horizontal link ids precede vertical (topology)
+    if spec.kind == KIND_BUS and spec.chan == "row":
+        for l in dead_links:
+            if l < n_h:  # horizontal link in row r => shared bus r dead
+                res_dead[l // max(cols - 1, 1)] = True
+        for f in dead_fcs:
+            res_dead[f] = True  # FC f drives bus f
+    elif spec.kind == KIND_BUS:  # chan == "node": private channel per chip
+        for l in dead_links:
+            for n in topo.link_endpoints[l]:
+                res_dead[int(n)] = True
+        for f in dead_fcs:  # FC f serves row f's private channels
+            res_dead[f * cols:(f + 1) * cols] = True
+    elif spec.kind == KIND_PNSSD:
+        for l in dead_links:
+            if l < n_h:
+                res_dead[l // max(cols - 1, 1)] = True  # row bus
+            else:
+                res_dead[rows + (l - n_h) // max(rows - 1, 1)] = True  # col bus
+        for f in dead_fcs:
+            res_dead[lay.L_pad + f] = True
+    else:  # mesh kinds (nossd / scout): faults map 1:1
+        for l in dead_links:
+            res_dead[l] = True
+        for f in dead_fcs:
+            res_dead[lay.L_pad + f] = True
+    return res_dead, dead_fcs
 
 
 def _lower_one(cfg: SSDConfig, topo: MeshTopology, lay: SweepLayout,
-               spec: DesignSpec) -> dict:
+               spec: DesignSpec, faults: FaultSpec | None = None) -> dict:
     """Lower one spec to numpy tables in the unified padded layout."""
     rows, cols, N = lay.rows, lay.cols, lay.n_nodes
     L0, F0, R = lay.L_pad, lay.F_pad, lay.R_pad
@@ -292,6 +414,12 @@ def _lower_one(cfg: SSDConfig, topo: MeshTopology, lay: SweepLayout,
     else:  # KIND_SCOUT — route masks come from the scout at runtime
         dist[:rows] = mesh_dist
 
+    res_dead, dead_fcs = _fault_mask(topo, lay, spec, faults)
+    if spec.fc_nearest:
+        # nearest-available FC selection must never pick a dead controller
+        for f in dead_fcs:
+            fc_valid[f] = False
+
     if spec.kind in (KIND_BUS, KIND_PNSSD):
         mult = spec.bw_mult
         xfer_num, xfer_den = 1000, int(round(cfg.chan_gbps * mult * 1000))
@@ -325,18 +453,26 @@ def _lower_one(cfg: SSDConfig, topo: MeshTopology, lay: SweepLayout,
         dist=dist,
         fc_valid=fc_valid,
         fc_node=fc_node,
+        res_dead=res_dead,
     )
 
 
 @functools.lru_cache(maxsize=None)
-def lower_designs(cfg: SSDConfig, names: tuple) -> LaneTables:
-    """Lower ``names`` (design names, in order) into stacked LaneTables."""
+def lower_designs(cfg: SSDConfig, names: tuple,
+                  faults: FaultSpec | None = None) -> LaneTables:
+    """Lower ``names`` (design names, in order) into stacked LaneTables.
+
+    ``faults`` (hashable, part of the memo key) lowers hardware faults into
+    per-design ``res_dead`` availability masks; ``None`` (and any empty
+    FaultSpec) produces all-False masks — the fault-free tables are
+    bit-identical to the pre-fault-model lowering.
+    """
     for d in names:
         if d not in REGISTRY:
             raise ValueError(f"unknown design {d!r}; one of {DESIGNS}")
     topo = build_mesh(cfg.rows, cfg.cols)
     lay = sweep_layout(cfg)
-    lowered = [_lower_one(cfg, topo, lay, REGISTRY[d]) for d in names]
+    lowered = [_lower_one(cfg, topo, lay, REGISTRY[d], faults) for d in names]
     stacked = {
         k: jnp.asarray(np.stack([low[k] for low in lowered]))
         for k in lowered[0]

@@ -1,0 +1,404 @@
+"""Scalar fault-aware reference for the jitted scan step (ISSUE 8).
+
+A plain-python/numpy transliteration of the two step bodies built by
+``sim._make_step`` — ``static_step`` (bus / fixed-route mesh designs,
+two-candidate scheduling over the unified resource vector) and
+``scout_step`` (Venice: FC selection, scout retry loop, circuit commit) —
+one transaction at a time, with the fault semantics threaded through
+exactly as in the vectorized scan: dead candidates lose selection, a
+transaction with no live candidate fails permanently at
+``tcand + FAIL_TIMEOUT``, dead links look busy to the scout DFS
+(``routing.scout_route_ref`` is the decision-identical routing oracle),
+and dead FCs are never selected.
+
+This module is the *oracle* the vectorized fault path is pinned against
+element-wise (``tests/test_faults.py``), the same role
+``routing.scout_route_ref`` / ``ftl.FTL`` / ``sim._nominal_order_ref``
+play for their engines.  It shares only host-side, non-jitted helpers
+with ``sim`` (packing, nominal ordering, state rebase); every scheduling
+decision of the scan itself is re-derived independently here.
+
+State is carried in exactly ``sim.initial_lane_state``'s layout, so the
+streaming window-boundary tests rebase it with the production
+``sim.rebase_lane_state`` and swap faulted tables between windows just
+like ``stream.stream_simulate`` does.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.routing import scout_route_ref
+from repro.core.topology import build_mesh
+from repro.ssd import sim as S
+from repro.ssd.config import SSDConfig, TICK_NS
+from repro.ssd.designs import (
+    KIND_SCOUT,
+    LaneTables,
+    lower_designs,
+    resolve_specs,
+    sweep_layout_geom,
+)
+from repro.ssd.ftl import KIND_READ
+
+__all__ = ["LaneRef", "simulate_ref"]
+
+_BIG = int(S._BIG)
+_FAIL = int(S.FAIL_TIMEOUT)
+_MAX_TRIES = S._MAX_TRIES
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---- the one-gap resource model, scalar ----------------------------------
+# resources are numpy int32 triples (free_at, gap_s, gap_e); all arithmetic
+# below runs in python ints (values are bounded by _BIG + a few durations,
+# well inside int32, so the int32 scan and this reference agree exactly)
+
+
+def _gap_avail(gs, ge, fa, e, d):
+    s_gap = max(e, gs)
+    if s_gap + d <= ge:
+        return s_gap
+    return max(e, fa)
+
+
+def _gap_commit(gs, ge, fa, s, e2):
+    if s >= gs and e2 <= ge:  # inside the remembered gap
+        if (s - gs) >= (ge - e2):
+            return gs, s, fa
+        return e2, ge, fa
+    new_idle = max(s, fa) - fa
+    if (ge - gs) >= new_idle:
+        return gs, ge, max(fa, e2)
+    return fa, max(s, fa), max(fa, e2)
+
+
+def _avail1(res, i, e, d):
+    free, gs, ge = res
+    return _gap_avail(int(gs[i]), int(ge[i]), int(free[i]), e, d)
+
+
+def _commit1(res, i, s, e2, enable):
+    if not enable:
+        return
+    free, gs, ge = res
+    ngs, nge, nfa = _gap_commit(int(gs[i]), int(ge[i]), int(free[i]), s, e2)
+    free[i], gs[i], ge[i] = nfa, ngs, nge
+
+
+def _busy_at1(res, i, t, d):
+    free, gs, ge = res
+    return not (t >= int(free[i])
+                or (t >= int(gs[i]) and t + d <= int(ge[i])))
+
+
+def _sched_gap(res, i, e, d, enable):
+    s = _avail1(res, i, e, d) if enable else e
+    _commit1(res, i, s, s + d, enable)
+    return s
+
+
+def _path_sched(res, mask, e, d):
+    """Earliest common start — transliterates ``path_sched`` including the
+    masked-out zeros inside the maxima."""
+    free = res[0]
+    s1 = 0
+    tail = 0
+    for i in range(len(mask)):
+        if mask[i]:
+            s1 = max(s1, _avail1(res, i, e, d))
+            tail = max(tail, int(free[i]))
+    s1 = max(s1, e)
+    ok = not any(mask[i] and _busy_at1(res, i, s1, d)
+                 for i in range(len(mask)))
+    return s1 if ok else max(e, tail)
+
+
+def _commit_mask(res, mask, s, e2, enable):
+    if not enable:
+        return
+    for i in range(len(mask)):
+        if mask[i]:
+            _commit1(res, i, s, e2, True)
+
+
+def _fc_select(avail, dist_row, tcand):
+    """Closest FC available now, else earliest-available (first-min
+    argmin ties, matching ``jnp.argmin``)."""
+    free_now = [a <= tcand for a in avail]
+    if any(free_now):
+        key = [d if f else _BIG for d, f in zip(dist_row, free_now)]
+        fc = int(np.argmin(key))
+    else:
+        fc = int(np.argmin(avail))
+    return fc, max(tcand, avail[fc])
+
+
+class LaneRef:
+    """One design lane of the scalar reference scan.
+
+    ``state`` is the production lane-state pytree (numpy); pass a carried
+    state into :meth:`run` to replay streaming windows, rebasing between
+    them with ``sim.rebase_lane_state`` and swapping tables via
+    :meth:`set_faults` at window boundaries."""
+
+    def __init__(self, cfg: SSDConfig, design: str, faults=None):
+        self.cfg = cfg
+        self.design = design
+        self.spec = resolve_specs((design,))[0]
+        self.scout = self.spec.kind == KIND_SCOUT
+        sig = S._geom_sig(cfg)
+        self.topo = build_mesh(sig[0], sig[1])
+        self.lay = sweep_layout_geom(sig[0], sig[1])
+        self.scout_hop_ns = sig[4]
+        self.set_faults(faults)
+
+    def set_faults(self, faults) -> None:
+        """(Re-)lower this lane's tables under ``faults`` — the scalar
+        analogue of the stream engine's window-boundary table swap."""
+        tables = lower_designs(self.cfg, (self.design,), faults)
+        self.t = LaneTables(*(np.asarray(a)[0] for a in tables))
+
+    # -- scalar views of the lowered tables --
+    def _sc(self, name):
+        return np.asarray(getattr(self.t, name)).item()
+
+    def initial_state(self, seed: int):
+        return S.initial_lane_state(self.cfg, self.scout, seed)
+
+    def _cmd_ticks(self, hops: int) -> int:
+        ns = self._sc("cmd_base_ns") + hops * self._sc("hop_ns")
+        return max(_ceil_div(ns, TICK_NS), 1)
+
+    def _xfer_ticks(self, nbytes: int, hops: int) -> int:
+        ns = _ceil_div(nbytes * self._sc("xfer_num"), self._sc("xfer_den"))
+        return _ceil_div(ns + hops * self._sc("hop_ns"), TICK_NS)
+
+    def _d_est(self, nbytes: int, is_read: bool, op: int) -> int:
+        d = (self._xfer_ticks(nbytes, self._sc("d_est_hops"))
+             + self._sc("d_est_pad"))
+        if self._sc("hold") and is_read:
+            d += op
+        return d
+
+    # -- one statically-routed transaction ---------------------------------
+    def _static_txn(self, state, tx: dict) -> dict:
+        plane_free, res = state
+        L0, F0 = self.lay.L_pad, self.lay.F_pad
+        t = self.t
+        is_read = tx["kind"] == KIND_READ
+        tcand = max(tx["arrival"], int(plane_free[tx["plane"]]))
+        d_est = self._d_est(tx["nbytes"], is_read, tx["op"])
+
+        if self._sc("fc_nearest"):
+            avail = [
+                _avail1(res, L0 + f, tcand, d_est)
+                if bool(t.fc_valid[f]) else _BIG
+                for f in range(F0)
+            ]
+            fc, t0 = _fc_select(avail,
+                                [int(t.dist[f, tx["node"]])
+                                 for f in range(F0)], tcand)
+            fcA = fcB = fc
+        else:
+            t0 = tcand
+            fcA = int(t.fc_fixed[tx["node"], 0])
+            fcB = int(t.fc_fixed[tx["node"], 1])
+        cand2 = bool(t.cand2_ok[tx["node"]])
+
+        def eval_cand(fc, cand, enable):
+            mask = np.asarray(t.cmask[fc, tx["node"], cand], bool)
+            dead = bool(np.any(mask & np.asarray(t.res_dead, bool)))
+            enable = enable and not dead
+            hops = int(t.hops[fc, tx["node"], cand])
+            cmd = self._cmd_ticks(hops)
+            xfer = self._xfer_ticks(tx["nbytes"], hops)
+            ovh = self._sc("ovh")
+            d0 = ovh + cmd + (0 if is_read else xfer)
+            r = tuple(a.copy() for a in res)
+            s0 = _path_sched(r, mask, t0, d0)
+            _commit_mask(r, mask, s0, s0 + d0, enable)
+            op_end = s0 + d0 + tx["op"]
+            d1 = ovh + xfer
+            s1 = _path_sched(r, mask, op_end, d1)
+            _commit_mask(r, mask, s1, s1 + d1, enable and is_read)
+            done = s1 + d1 if is_read else op_end
+            wait = (s0 - t0) + (s1 - op_end if is_read else 0)
+            occ = d0 + (d1 if is_read else 0)
+            return r, done, wait, occ, hops, dead
+
+        resA, doneA, waitA, occA, hopsA, deadA = eval_cand(fcA, 0, True)
+        resB, doneB, waitB, occB, hopsB, deadB = eval_cand(fcB, 1, cand2)
+        useA = ((_BIG if deadA else doneA)
+                <= (doneB if (cand2 and not deadB) else _BIG))
+        failed = deadA and (deadB or not cand2)
+        res_new = resA if useA else resB
+        done, wait, occ, hops_o = (
+            (doneA, waitA, occA, hopsA) if useA
+            else (doneB, waitB, occB, hopsB)
+        )
+        if failed:
+            done = tcand + _FAIL
+            wait = _FAIL
+            occ = 0
+            hops_o = 0
+        for a, b in zip(res, res_new):
+            a[:] = b
+        plane_free[tx["plane"]] = done
+        count_bus = self._sc("count_bus")
+        return dict(
+            completion=done, wait=wait, conflict=wait > 0, hops=hops_o,
+            tries=1, scout_steps=0, misroutes=0,
+            bus_hold=occ if count_bus else 0,
+            link_hold=0 if count_bus else hops_o * occ,
+            failed=failed,
+        )
+
+    # -- one scout-routed transaction --------------------------------------
+    def _scout_until_success(self, links, src, dst, t0, rng, d_hold):
+        t = self.t
+        n_scouts = int(self._sc("n_scouts"))
+        allow = bool(self._sc("allow_nonmin"))
+        nl = self.topo.n_links
+        dead = np.asarray(t.res_dead, bool)[:nl]
+
+        def try_once(tt, rng):
+            busy = np.array(
+                [_busy_at1(links, i, tt, d_hold) for i in range(nl)], bool
+            ) | dead
+            best = None
+            for k in range(n_scouts):
+                rng = ((rng * 747796405 + 2891336453) & 0xFFFFFFFF) | 1
+                r = scout_route_ref(self.topo, src, dst, busy, rng, allow)
+                if best is None:
+                    best = r
+                elif r.success and (not best.success or r.hops < best.hops):
+                    best = r
+            return best, rng
+
+        res, rng = try_once(t0, rng)
+        tt, tries = t0, 1
+        free, gs, _ = links
+        while not res.success and tries < _MAX_TRIES:
+            ev = min(
+                min((int(f) for f in free if int(f) > tt), default=_BIG),
+                min((int(g) for g in gs if int(g) > tt), default=_BIG),
+            )
+            t_next = max(ev, tt + 1)
+            if tries + 1 >= _MAX_TRIES:
+                t_next = int(free.max())
+            res, rng = try_once(t_next, rng)
+            tt = t_next
+            tries += 1
+        return res, tt, rng, tries
+
+    def _scout_txn(self, state, tx: dict) -> dict:
+        plane_free, links, fcs, chips, rng = state
+        t = self.t
+        n_fcs = self.lay.rows
+        is_read = tx["kind"] == KIND_READ
+        hold = bool(self._sc("hold"))
+        tcand = max(tx["arrival"], int(plane_free[tx["plane"]]))
+        d_est = self._d_est(tx["nbytes"], is_read, tx["op"])
+        avail = [
+            _avail1(fcs, f, tcand, d_est) if bool(t.fc_valid[f]) else _BIG
+            for f in range(n_fcs)
+        ]
+        fc, t0 = _fc_select(
+            avail, [int(t.dist[f, tx["node"]]) for f in range(n_fcs)], tcand
+        )
+        src = int(t.fc_node[fc])
+        min_hops = int(t.dist[fc, tx["node"]])
+        cmd_pkt = self._cmd_ticks(min_hops)
+        en_cmd = is_read and not hold
+        s_cmd = _sched_gap(fcs, fc, t0, cmd_pkt, en_cmd)
+        ready_r = s_cmd + cmd_pkt + tx["op"]
+        t_nonread = max(t0, _avail1(chips, tx["node"], t0, d_est))
+        t_read = max(ready_r, _avail1(fcs, fc, ready_r, d_est),
+                     _avail1(chips, tx["node"], ready_r, d_est))
+        t_xfer_req = t_read if is_read else t_nonread
+        t_scout = t0 if hold else t_xfer_req
+        sres, t_resv, rng_new, tries = self._scout_until_success(
+            links, src, tx["node"], t_scout, int(rng), d_est
+        )
+        hops_o = sres.hops
+        rtt = _ceil_div((sres.steps + hops_o) * self.scout_hop_ns, TICK_NS)
+        start = t_resv + rtt
+        cmd_v = self._cmd_ticks(hops_o)
+        xfer_v = self._xfer_ticks(tx["nbytes"], hops_o)
+        dur_p = xfer_v if is_read else cmd_v + xfer_v
+        end_p = start + dur_p
+        done_p = end_p if is_read else end_p + tx["op"]
+        wait_p = (s_cmd - t0) + (start - t_xfer_req)
+        done_r_h = start + cmd_v + tx["op"] + xfer_v
+        data_end_w = start + cmd_v + xfer_v
+        circuit_end = done_r_h if is_read else data_end_w
+        done_h = done_r_h if is_read else data_end_w + tx["op"]
+        commit_end = circuit_end if hold else end_p
+        done = done_h if hold else done_p
+        wait = (start - t0) if hold else wait_p
+        fail = not sres.success
+        if fail:
+            done = tcand + _FAIL
+            wait = _FAIL
+        else:
+            for lnk in sres.path_links:
+                _commit1(links, int(lnk), t_resv, commit_end, True)
+            _commit1(fcs, fc, t_resv, commit_end, True)
+            _commit1(chips, tx["node"], t_resv, commit_end, True)
+        plane_free[tx["plane"]] = done
+        state = (plane_free, links, fcs, chips,
+                 np.uint32(rng_new))
+        return state, dict(
+            completion=done, wait=wait, conflict=(tries > 1) or fail,
+            hops=hops_o, tries=tries,
+            scout_steps=sres.steps, misroutes=sres.misroutes,
+            bus_hold=0,
+            link_hold=0 if fail else hops_o * (commit_end - t_resv),
+            failed=fail,
+        )
+
+    # -- drive a packed transaction batch ----------------------------------
+    def run(self, packed, state=None):
+        """Scan ``packed`` (a numpy ``sim.TxnArrays``, natural length)
+        through the scalar step; returns ``(state, outs)`` with ``outs`` a
+        dict of numpy arrays in scan order."""
+        if state is None:
+            state = self.initial_state(0)
+        n = len(np.asarray(packed.arrival))
+        keys = ("completion", "wait", "conflict", "hops", "tries",
+                "scout_steps", "misroutes", "bus_hold", "link_hold",
+                "failed")
+        outs = {k: [] for k in keys}
+        for j in range(n):
+            tx = dict(
+                arrival=int(packed.arrival[j]), kind=int(packed.kind[j]),
+                plane=int(packed.plane[j]), node=int(packed.node[j]),
+                nbytes=int(packed.nbytes[j]), op=int(packed.op_ticks[j]),
+            )
+            if self.scout:
+                state, o = self._scout_txn(state, tx)
+            else:
+                o = self._static_txn(state, tx)
+            for k in keys:
+                outs[k].append(o[k])
+        dt = dict(conflict=bool, failed=bool)
+        return state, {k: np.asarray(v, dt.get(k, np.int64))
+                       for k, v in outs.items()}
+
+
+def simulate_ref(cfg: SSDConfig, txns, design: str, seed: int = 0,
+                 faults=None):
+    """Scalar-reference run of one design lane: nominal-orders and packs
+    with the production host-side helpers (they are not part of the jitted
+    scan), then scans with :class:`LaneRef`.  Returns the outs dict in
+    scan order — element-wise comparable to ``sim.simulate``'s per-txn
+    arrays."""
+    order = S._nominal_order(cfg, txns)
+    packed, _op = S._pack_txns(cfg, txns, order, faults)
+    lane = LaneRef(cfg, design, faults)
+    # the planner forces odd scout seeds (sweep_plan: ``seeds[i] | 1``)
+    _, outs = lane.run(packed, lane.initial_state(seed | 1))
+    return outs

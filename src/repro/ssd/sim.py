@@ -75,6 +75,18 @@ __all__ = [
 _BIG = np.int32(2**30)
 _MAX_TRIES = 64  # scout retry bound per reservation
 
+# Reservation-failure timeout (ISSUE 8): a transaction whose every candidate
+# path crosses a dead resource (``LaneTables.res_dead``) can never reserve.
+# Statically-routed designs have no alternative to retry, so the bounded
+# timeout-and-retry budget collapses to this one constant; scout designs
+# first burn their real retry schedule (``_MAX_TRIES`` event-driven retries
+# — the backoff is the advance to the next link-state change) and only a
+# scout that still cannot reach the chip gives up.  Either way the
+# transaction completes at ``t + FAIL_TIMEOUT`` with ``failed=True``, holds
+# no path resources, and frees its plane at the timeout — permanent-failure
+# accounting, not silent loss.  ~10.5 ms at the 10 ns tick.
+FAIL_TIMEOUT = np.int32(1 << 20)
+
 # Lane-step kernel backend for the batched static runner.  "xla" keeps
 # the one-hot XLA step (the CPU default — interpret-mode Pallas lowers
 # to the same ops plus per-step call scaffolding, so on CPU it is pure
@@ -129,6 +141,7 @@ class StepOut(NamedTuple):
     misroutes: jnp.ndarray  # int32 non-minimal hops on final path (venice)
     bus_hold: jnp.ndarray  # int32 ticks a shared bus was held
     link_hold: jnp.ndarray  # int32 link-ticks (sum over links held)
+    failed: jnp.ndarray  # bool — permanent reservation failure (dead path)
 
 
 # ---------------------------------------------------------------------------
@@ -306,8 +319,12 @@ def _make_step(lay, stables, scout_hop_ns: int, n_planes: int, k_max: int,
 
     def eval_static_cand(sp, res, tx, is_read, t0, fc, cand, enable):
         """One statically-routed candidate: phase 0 (command, +data for
-        writes), flash op, phase 1 (read data) on one combined mask."""
+        writes), flash op, phase 1 (read data) on one combined mask.
+        A candidate whose mask touches a dead resource is value-dead:
+        its commits are disabled and ``dead`` is returned for selection."""
         mask = sp.cmask[fc, tx.node, cand]
+        dead = jnp.any(mask & sp.res_dead)
+        enable = enable & ~dead
         hops = sp.hops[fc, tx.node, cand]
         cmd = cmd_ticks(sp, hops)
         xfer = xfer_ticks(sp, tx.nbytes, hops)
@@ -322,7 +339,7 @@ def _make_step(lay, stables, scout_hop_ns: int, n_planes: int, k_max: int,
         done = jnp.where(is_read, s1 + d1, op_end)
         wait = (s0 - t0) + jnp.where(is_read, s1 - op_end, 0)
         occ = d0 + jnp.where(is_read, d1, 0)  # resource-held ticks
-        return res, done, wait, occ, hops
+        return res, done, wait, occ, hops, dead
 
     def scout_until_success(links3, sp, src, dst, t0, rng, d_hold):
         """Retry the scout at successive link-free events until it reserves.
@@ -335,9 +352,13 @@ def _make_step(lay, stables, scout_hop_ns: int, n_planes: int, k_max: int,
         program."""
         n_scouts = fx(sp, "n_scouts")
         allow = fx(sp, "allow_nonmin")
+        # dead links look permanently busy to the DFS, so the scout routes
+        # AROUND faults (the whole point of path diversity); an all-False
+        # res_dead makes this OR a no-op — fault-free bit-identity
+        dead_links = sp.res_dead[:L0]
 
         def try_once(t, rng):
-            busy = _busy_at(links3, t, d_hold)
+            busy = _busy_at(links3, t, d_hold) | dead_links
             best = None
             for k in range(k_max):
                 rng_adv = (
@@ -412,13 +433,20 @@ def _make_step(lay, stables, scout_hop_ns: int, n_planes: int, k_max: int,
         fcA = jnp.where(fc_nearest, fc_near, sp.fc_fixed[tx.node, 0])
         fcB = jnp.where(fc_nearest, fc_near, sp.fc_fixed[tx.node, 1])
         cand2 = sp.cand2_ok[tx.node]
-        resA, doneA, waitA, occA, hopsA = eval_static_cand(
+        resA, doneA, waitA, occA, hopsA, deadA = eval_static_cand(
             sp, res, tx, is_read, t0, fcA, 0, tx.valid
         )
-        resB, doneB, waitB, occB, hopsB = eval_static_cand(
+        resB, doneB, waitB, occB, hopsB, deadB = eval_static_cand(
             sp, res, tx, is_read, t0, fcB, 1, tx.valid & cand2
         )
-        useA = doneA <= jnp.where(cand2, doneB, _BIG)
+        # a dead candidate never wins selection; when every candidate is
+        # dead, the reservation fails permanently (FAIL_TIMEOUT accounting).
+        # With all-False res_dead this reduces exactly to the fault-free
+        # ``doneA <= where(cand2, doneB, _BIG)`` — bit-identical outputs.
+        useA = jnp.where(deadA, _BIG, doneA) <= jnp.where(
+            cand2 & ~deadB, doneB, _BIG
+        )
+        failed = deadA & (deadB | ~cand2)
         res = jax.tree_util.tree_map(
             lambda a, b: jnp.where(useA, a, b), resA, resB
         )
@@ -426,6 +454,10 @@ def _make_step(lay, stables, scout_hop_ns: int, n_planes: int, k_max: int,
         wait = jnp.where(useA, waitA, waitB)
         occ = jnp.where(useA, occA, occB)
         hops_o = jnp.where(useA, hopsA, hopsB)
+        done = jnp.where(failed, tcand + FAIL_TIMEOUT, done)
+        wait = jnp.where(failed, FAIL_TIMEOUT, wait)
+        occ = jnp.where(failed, 0, occ)
+        hops_o = jnp.where(failed, 0, hops_o)
         plane_free = plane_free.at[tx.plane].set(
             jnp.where(tx.valid, done, plane_free[tx.plane])
         )
@@ -439,6 +471,7 @@ def _make_step(lay, stables, scout_hop_ns: int, n_planes: int, k_max: int,
             misroutes=jnp.int32(0),
             bus_hold=jnp.where(count_bus, occ, 0),
             link_hold=jnp.where(count_bus, 0, hops_o * occ),
+            failed=failed,
         )
         return (plane_free, res), out
 
@@ -453,6 +486,10 @@ def _make_step(lay, stables, scout_hop_ns: int, n_planes: int, k_max: int,
 
         d_est = d_est_of(sp, tx, is_read, hold)
         avail = _avail_all(fcs, tcand, d_est)
+        # dead FCs (fc_valid lowered False by the FaultSpec) are never
+        # selected; all-valid lanes see ``where(True, avail, _BIG)`` — a
+        # no-op, so the fault-free program output is unchanged
+        avail = jnp.where(sp.fc_valid[:n_fcs], avail, _BIG)
         fc, t0 = fc_select(avail, sp.dist[:n_fcs, tx.node], tcand)
         src = sp.fc_node[fc]
         min_hops = sp.dist[fc, tx.node]
@@ -493,23 +530,31 @@ def _make_step(lay, stables, scout_hop_ns: int, n_planes: int, k_max: int,
         commit_end = jnp.where(hold, circuit_end, end_p)
         done = jnp.where(hold, done_h, done_p)
         wait = jnp.where(hold, start - t0, wait_p)
-        links = _commit_mask(links, sres.path_mask, t_resv, commit_end,
-                             tx.valid)
-        fcs = _commit1(fcs, fc, t_resv, commit_end, tx.valid)
-        chips = _commit1(chips, tx.node, t_resv, commit_end, tx.valid)
+        # permanent failure: the scout burned its whole retry schedule (the
+        # final try runs against an otherwise-idle mesh, so a fault-free
+        # lane can never get here) — no circuit is committed, the txn
+        # times out, and its plane frees at the timeout
+        fail = ~sres.success
+        ok = tx.valid & sres.success
+        done = jnp.where(fail, tcand + FAIL_TIMEOUT, done)
+        wait = jnp.where(fail, FAIL_TIMEOUT, wait)
+        links = _commit_mask(links, sres.path_mask, t_resv, commit_end, ok)
+        fcs = _commit1(fcs, fc, t_resv, commit_end, ok)
+        chips = _commit1(chips, tx.node, t_resv, commit_end, ok)
         plane_free = plane_free.at[tx.plane].set(
             jnp.where(tx.valid, done, plane_free[tx.plane])
         )
         out = StepOut(
             completion=done,
             wait=wait,
-            conflict=tries > 1,
+            conflict=(tries > 1) | fail,
             hops=hops_o,
             tries=tries,
             scout_steps=sres.steps,
             misroutes=sres.misroutes,
             bus_hold=jnp.int32(0),
-            link_hold=hops_o * (commit_end - t_resv),
+            link_hold=jnp.where(fail, 0, hops_o * (commit_end - t_resv)),
+            failed=fail,
         )
         return (plane_free, links, fcs, chips, rng), out
 
@@ -571,6 +616,7 @@ def _skip_out(tx: TxnArrays) -> StepOut:
         misroutes=jnp.int32(0),
         bus_hold=jnp.int32(0),
         link_hold=jnp.int32(0),
+        failed=jnp.bool_(False),
     )
 
 
@@ -617,6 +663,7 @@ def _zero_out(capacity: int) -> StepOut:
     return StepOut(
         completion=z, wait=z, conflict=jnp.zeros((capacity,), jnp.bool_),
         hops=z, tries=z, scout_steps=z, misroutes=z, bus_hold=z, link_hold=z,
+        failed=jnp.zeros((capacity,), jnp.bool_),
     )
 
 
@@ -847,7 +894,8 @@ def _build_stack_fn(sig: tuple, capacity: int, K: int, k_max: int,
 
 class BatchScalars(NamedTuple):
     """Per-lane design scalars of a batched group ([B], order of
-    ``_PROMOTABLE``) plus the FC validity row ([B, F_pad])."""
+    ``_PROMOTABLE``) plus the FC validity row ([B, F_pad]) and the
+    failed-resource mask ([B, R_pad], all-False when fault-free)."""
 
     hold: jnp.ndarray
     allow_nonmin: jnp.ndarray
@@ -862,6 +910,7 @@ class BatchScalars(NamedTuple):
     d_est_hops: jnp.ndarray
     d_est_pad: jnp.ndarray
     fc_valid: jnp.ndarray
+    res_dead: jnp.ndarray
 
 
 class BatchTxnTables(NamedTuple):
@@ -957,6 +1006,8 @@ def _make_batched_static_step(lay, n_planes: int, fixed: tuple):
                 tt.mask_words[:, :, cand, :].astype(jnp.int32), fc
             )
             mask = onehot.unpack_bits(words, R)
+            dead = jnp.any(mask & sp.res_dead, axis=1)
+            enable = enable & ~dead
             hops = onehot.take(tt.hops[:, :, cand], fc)
             cmd = cmd_ticks(sp, hops)
             xfer = xfer_ticks(sp, tx.nbytes, hops)
@@ -971,12 +1022,16 @@ def _make_batched_static_step(lay, n_planes: int, fixed: tuple):
             done = jnp.where(is_read, s1 + d1, op_end)
             wait = (s0 - t0) + jnp.where(is_read, s1 - op_end, 0)
             occ = d0 + jnp.where(is_read, d1, 0)
-            return res, done, wait, occ, hops
+            return res, done, wait, occ, hops, dead
 
-        resA, doneA, waitA, occA, hopsA = eval_cand(res, 0, fcA, valid)
-        resB, doneB, waitB, occB, hopsB = eval_cand(res, 1, fcB,
-                                                    valid & cand2)
-        useA = doneA <= jnp.where(cand2, doneB, _BIG)
+        resA, doneA, waitA, occA, hopsA, deadA = eval_cand(res, 0, fcA, valid)
+        resB, doneB, waitB, occB, hopsB, deadB = eval_cand(res, 1, fcB,
+                                                           valid & cand2)
+        # mirrors the unbatched static step's dead-candidate selection
+        useA = jnp.where(deadA, _BIG, doneA) <= jnp.where(
+            cand2 & ~deadB, doneB, _BIG
+        )
+        failed = deadA & (deadB | ~cand2)
         res = jax.tree_util.tree_map(
             lambda a, b: jnp.where(useA[:, None], a, b), resA, resB
         )
@@ -984,6 +1039,10 @@ def _make_batched_static_step(lay, n_planes: int, fixed: tuple):
         wait = jnp.where(useA, waitA, waitB)
         occ = jnp.where(useA, occA, occB)
         hops_o = jnp.where(useA, hopsA, hopsB)
+        done = jnp.where(failed, tcand + FAIL_TIMEOUT, done)
+        wait = jnp.where(failed, FAIL_TIMEOUT, wait)
+        occ = jnp.where(failed, 0, occ)
+        hops_o = jnp.where(failed, 0, hops_o)
         upd = onehot.onehot(tx.plane, n_planes) & valid[:, None]
         plane_free = jnp.where(upd, done[:, None], plane_free)
         cb = jnp.logical_and(fx(sp, "count_bus"), True)
@@ -999,6 +1058,7 @@ def _make_batched_static_step(lay, n_planes: int, fixed: tuple):
             bus_hold=jnp.where(valid & cb, occ, 0),
             link_hold=jnp.where(valid & jnp.logical_not(cb),
                                 hops_o * occ, 0),
+            failed=valid & failed,
         )
         return (plane_free, res), out
 
@@ -1011,6 +1071,7 @@ def _zero_out_tm(capacity: int, B: int) -> StepOut:
         completion=z, wait=z,
         conflict=jnp.zeros((capacity, B), jnp.bool_),
         hops=z, tries=z, scout_steps=z, misroutes=z, bus_hold=z, link_hold=z,
+        failed=jnp.zeros((capacity, B), jnp.bool_),
     )
 
 
@@ -1158,6 +1219,7 @@ def _tables_avatar(lay, G: int, n_shards: int) -> LaneTables:
         dist=_sds((G, F0, N), np.int32, L, n_shards),
         fc_valid=_sds((G, F0), bool, L, n_shards),
         fc_node=_sds((G, F0), np.int32, L, n_shards),
+        res_dead=_sds((G, R), bool, L, n_shards),
     )
     return LaneTables(**f)
 
@@ -1221,6 +1283,7 @@ def _avatars_for_key(key: tuple):
         *(_sds((B,), _TABLE_SCALAR_DTYPES[name], L, n_shards)
           for name in _PROMOTABLE),
         fc_valid=_sds((B, F0), bool, L, n_shards),
+        res_dead=_sds((B, R), bool, L, n_shards),
     )
     bt = BatchTxnTables(
         mask_words=_sds((capacity, B, F0, 2, W), np.uint8, T, n_shards),
@@ -1525,6 +1588,9 @@ class SimResult(NamedTuple):
     # --- host-request surface (aligned with req_latency, request order) ---
     req_completion: np.ndarray | None = None  # ticks, max over request's txns
     req_tenant: np.ndarray | None = None  # tenant id per request, or None
+    # --- fault surface (ISSUE 8; None on results predating the model) ---
+    failed: np.ndarray | None = None  # bool per txn — permanent path failure
+    req_failed: np.ndarray | None = None  # bool per request (any txn failed)
 
     @property
     def exec_s(self) -> float:
@@ -1567,6 +1633,22 @@ class SimResult(NamedTuple):
 
     def conflict_rate(self) -> float:
         return float(np.mean(self.conflict))
+
+    def failure_rate(self) -> float:
+        """Fraction of transactions that permanently failed (dead path)."""
+        if self.failed is None or len(self.failed) == 0:
+            return 0.0
+        return float(np.mean(self.failed))
+
+    def iops_ok(self, n_requests: int | None = None) -> float:
+        """Throughput counting only requests with NO failed transaction —
+        the degraded-mode retention metric (a timed-out request is not
+        service)."""
+        if self.req_failed is None:
+            return self.iops(n_requests)
+        n_all = len(self.req_latency) if n_requests is None else n_requests
+        n_ok = n_all - int(np.sum(self.req_failed))
+        return n_ok / max(self.exec_s, 1e-12)
 
 
 def _pad_to(n: int) -> int:
@@ -1690,13 +1772,55 @@ def _nominal_order_carry(cfg: SSDConfig, txns, avail0: np.ndarray):
     return np.argsort(nominal, kind="stable"), avail_out
 
 
-def _pack_txns(cfg: SSDConfig, txns, order: np.ndarray):
+_M64 = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+def _read_retry_extra(faults, kind: np.ndarray, node: np.ndarray,
+                      arrival: np.ndarray, plane: np.ndarray) -> np.ndarray:
+    """Deterministic read-retry latency-ladder extension (ticks, int32).
+
+    Chip-level read-retry (DDR-NAND tail model): each read on an afflicted
+    chip independently fails its sense with probability ``retry_prob`` per
+    ladder rung, paying that rung's extra ticks, until a rung succeeds or
+    the ladder is exhausted.  The draw is a splitmix64 hash of the
+    transaction's (arrival, plane) and the FaultSpec's ``retry_seed`` —
+    design-independent, so every lane of a sweep sees the identical
+    extended reads and the sweep stays an apples-to-apples comparison.
+    """
+    sel = kind == KIND_READ
+    if faults.retry_chips:  # () = every chip afflicted
+        sel &= np.isin(node, np.asarray(faults.retry_chips))
+    extra = np.zeros((len(kind),), np.int64)
+    if not sel.any():
+        return extra
+    with np.errstate(over="ignore"):  # wraparound is the hash
+        base = (arrival.astype(np.uint64) * np.uint64(0x9E3779B97F4A7C15)
+                + plane.astype(np.uint64) * np.uint64(0xBF58476D1CE4E5B9)
+                + np.uint64(faults.retry_seed & 0xFFFFFFFF))
+    alive = sel.copy()
+    for i, rung in enumerate(faults.retry_ladder):
+        inc = np.uint64(((i + 1) * 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF)
+        z = (base + inc) & _M64
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9) & _M64
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB) & _M64
+        z = z ^ (z >> np.uint64(31))
+        u = (z >> np.uint64(11)).astype(np.float64) * (2.0 ** -53)
+        alive = alive & (u < faults.retry_prob)
+        if not alive.any():
+            break
+        extra = np.where(alive, extra + int(rung), extra)
+    return extra
+
+
+def _pack_txns(cfg: SSDConfig, txns, order: np.ndarray, faults=None):
     """Reorder numpy transaction fields into (host) TxnArrays, unpadded.
 
     Capacity padding happens at group-stack time (the planner pads each
     lane to its pool's capacity bucket), so the packed arrays here are the
     natural length and can be re-sliced per channel row without copies of
-    the padding."""
+    the padding.  ``faults`` (a ``designs.FaultSpec``) applies the
+    read-retry latency ladder to ``op_ticks`` host-side — the scan steps
+    stay RNG-free and every design lane shares the extension."""
     n = len(order)
 
     def f(name, dtype):
@@ -1708,6 +1832,11 @@ def _pack_txns(cfg: SSDConfig, txns, order: np.ndarray):
         cfg.t_read,
         np.where(kind == KIND_WRITE, cfg.t_prog, cfg.t_erase),
     ).astype(np.int32)
+    if faults is not None and faults.retry_active:
+        op = (op + _read_retry_extra(
+            faults, kind, f("node", np.int64), f("arrival", np.int64),
+            f("plane", np.int64),
+        )).astype(np.int32)
 
     arrs = TxnArrays(
         arrival=f("arrival", np.int32),
@@ -1745,6 +1874,12 @@ def _finish_result(cfg: SSDConfig, design: str, txns, order,
     seen = req_arr < np.iinfo(np.int64).max
     req_latency = (req_done - req_arr)[seen]
     req_completion = req_done[seen]
+    failed = (np.asarray(outs.failed[:n], bool)
+              if getattr(outs, "failed", None) is not None
+              else np.zeros((n,), bool))
+    req_fail = np.zeros((n_req,), bool)
+    np.logical_or.at(req_fail, req[host], failed[host])
+    req_failed = req_fail[seen]
     tenant = getattr(txns, "tenant_of_req", None)
     req_tenant = None
     if tenant is not None and len(tenant) >= n_req:
@@ -1785,6 +1920,8 @@ def _finish_result(cfg: SSDConfig, design: str, txns, order,
         static_energy_j=float(static_energy),
         req_completion=req_completion,
         req_tenant=req_tenant,
+        failed=failed,
+        req_failed=req_failed,
     )
 
 
@@ -1794,6 +1931,7 @@ def simulate_sweep(
     designs: Sequence[str] = DESIGNS,
     seeds: int | Sequence[int] = 0,
     decompose: bool | str = "auto",
+    faults=None,
 ) -> list[SimResult]:
     """Run the whole design sweep as batched, sharded jitted programs.
 
@@ -1810,6 +1948,12 @@ def simulate_sweep(
     the flag only gates the perf transformation), and lane groups are
     sharded across host CPU devices.  Results are bit-identical to the flat
     single-lane scan for every design.
+
+    ``faults`` (a ``designs.FaultSpec`` or None) injects hardware faults —
+    lowered into per-design availability masks — plus the read-retry
+    ladder.  ``None`` and an empty FaultSpec run the identical (bit-exact)
+    fault-free program; the executables and their cache keys are shared
+    either way, since the fault data rides the tables as arguments.
     """
     from repro.ssd.sweep_plan import execute_sim_runs
 
@@ -1822,14 +1966,19 @@ def simulate_sweep(
         raise ValueError(
             f"got {len(seeds)} seeds for {len(designs)} design lanes"
         )
-    return execute_sim_runs([(cfg, txns, designs, seeds, decompose)])[0]
+    run = (cfg, txns, designs, seeds, decompose)
+    if faults is not None:
+        run = run + (faults,)
+    return execute_sim_runs([run])[0]
 
 
-def simulate(cfg: SSDConfig, txns, design: str, seed: int = 0) -> SimResult:
+def simulate(cfg: SSDConfig, txns, design: str, seed: int = 0,
+             faults=None) -> SimResult:
     """Run one (config, design) simulation — a 1-lane design sweep.
 
     This is the flat-scan parity oracle for the decomposed/sharded paths:
     it never channel-decomposes.  Like every lane, it runs the shared
     design-agnostic executable of its (geometry, capacity, cost class,
     promotions) — only the 1-lane pool's *promotions* specialize it."""
-    return simulate_sweep(cfg, txns, (design,), (seed,), decompose=False)[0]
+    return simulate_sweep(cfg, txns, (design,), (seed,), decompose=False,
+                          faults=faults)[0]

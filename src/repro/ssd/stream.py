@@ -141,6 +141,16 @@ class _Lane:
         self.state = state
 
 
+def _active_faults(schedule: dict, w: int):
+    """Latest scheduled ``FaultSpec`` at or before window ``w`` (windows
+    inherit the most recent boundary's spec; None before the first)."""
+    spec = None
+    for k in sorted(schedule):
+        if k <= w:
+            spec = schedule[k]
+    return spec
+
+
 def _finish_stream(cfg: SSDConfig, design: str, agg: dict,
                    n_req_total: int, tenant) -> S.SimResult:
     """``sim._finish_result`` over the stream's concatenated (absolute,
@@ -152,11 +162,14 @@ def _finish_stream(cfg: SSDConfig, design: str, agg: dict,
     exec_ticks = int(completion.max() - arrival.min()) if n else 0
 
     req = agg["req"]
+    failed = agg["failed"]
     req_done = np.zeros((n_req_total,), np.int64)
     req_arr = np.full((n_req_total,), np.iinfo(np.int64).max)
+    req_fail = np.zeros((n_req_total,), bool)
     host = req >= 0
     np.maximum.at(req_done, req[host], completion[host])
     np.minimum.at(req_arr, req[host], arrival[host])
+    np.logical_or.at(req_fail, req[host], failed[host])
     seen = req_arr < np.iinfo(np.int64).max
     req_latency = (req_done - req_arr)[seen]
     req_completion = req_done[seen]
@@ -201,6 +214,8 @@ def _finish_stream(cfg: SSDConfig, design: str, agg: dict,
         static_energy_j=float(static_energy),
         req_completion=req_completion,
         req_tenant=req_tenant,
+        failed=failed,
+        req_failed=req_fail[seen],
     )
 
 
@@ -232,6 +247,9 @@ def stream_simulate(
     overprovision: float = 1.28,
     precondition: bool = True,
     decompose_seed: int = 0,
+    faults=None,
+    fault_schedule: dict | None = None,
+    capture: list | None = None,
 ) -> StreamResult:
     """Replay an arbitrarily long trace in tick-rebased windows.
 
@@ -243,6 +261,23 @@ def stream_simulate(
     window N's execution on a single prep thread.  Returns a
     :class:`StreamResult` whose per-design :class:`~repro.ssd.sim.SimResult`
     carries absolute int64 ticks.
+
+    ``faults`` (a ``designs.FaultSpec``) injects hardware faults for the
+    whole replay; ``fault_schedule`` maps window index -> ``FaultSpec``
+    taking effect at that window's START (a window boundary), modelling
+    mid-trace fault arrival — later windows inherit the latest boundary's
+    spec.  Faulted tables are swapped in as ARGUMENTS of the same
+    ``lanec`` executables (promotions are fault-invariant), so a schedule
+    never costs a recompile.  Hardware-fault windows stay bit-identical
+    to a monolithic ``sim.simulate`` with the same spec; read-retry draws
+    are keyed on window-frame arrivals and are therefore stream-frame
+    specific.
+
+    ``capture`` (debug hook): a list that receives one dict per window —
+    ``{"w", "packed", "n"}`` with the exact window-frame execution batch
+    the lanes scanned — so a scalar reference can replay the identical
+    per-window batches (``tests/test_faults.py`` pins the mid-stream
+    fault-arrival path element-wise this way).
     """
     designs = tuple(designs)
     specs = resolve_specs(designs)
@@ -270,7 +305,14 @@ def stream_simulate(
                              side="left")
     starts = np.concatenate(([0], bounds[:-1]))
 
-    tables = lower_designs(cfg, designs)
+    schedule = {int(k): v for k, v in (fault_schedule or {}).items()}
+    if faults is not None:
+        schedule.setdefault(0, faults)
+    if any(k < 0 for k in schedule):
+        raise ValueError("fault_schedule windows must be >= 0")
+    cur_spec = _active_faults(schedule, 0)
+
+    tables = lower_designs(cfg, designs, cur_spec)
     sig = S._geom_sig(cfg)
     lanes = []
     for i, spec in enumerate(specs):
@@ -359,7 +401,8 @@ def stream_simulate(
                 )
             carry["pool"] = defer
         order = np.argsort(batch["nominal"], kind="stable")
-        packed, op = S._pack_txns(cfg, batch, order)
+        packed, op = S._pack_txns(cfg, batch, order,
+                                  _active_faults(schedule, w))
         n = len(order)
         cap = max(carry["cap"], S._pad_to(max(n, 1)))
         carry["cap"] = cap
@@ -386,7 +429,8 @@ def stream_simulate(
     agg = [
         {"completion": [], "arrival": [], "wait": [], "conflict": [],
          "hops": [], "tries": [], "misroutes": [], "kind": [], "op": [],
-         "req": [], "bus_hold_ticks": 0, "link_hold_ticks": 0}
+         "req": [], "failed": [], "bus_hold_ticks": 0,
+         "link_hold_ticks": 0}
         for _ in designs
     ]
     windows: list = []
@@ -400,7 +444,21 @@ def stream_simulate(
         for w in range(n_windows):
             t_w = time.perf_counter()
             base = w * W
+            # window-boundary fault injection: swap the faulted tables in
+            # as executable ARGUMENTS (the lanec key's promotions are
+            # fault-invariant), carrying the scan state across untouched —
+            # in-flight occupancy survives the fault arrival, exactly as
+            # a mid-trace failure would leave it
+            spec_w = _active_faults(schedule, w)
+            if spec_w is not cur_spec:
+                cur_spec = spec_w
+                t_f = lower_designs(cfg, designs, cur_spec)
+                for i, ln in enumerate(lanes):
+                    ln.tables_row = LaneTables(
+                        *(np.asarray(a)[i] for a in t_f))
             n = prep["n"]
+            if capture is not None:
+                capture.append({"w": w, "packed": prep["packed"], "n": n})
             exec_s = 0.0
             wait_s = 0.0
             if n:
@@ -434,6 +492,7 @@ def stream_simulate(
                     a["kind"].append(np.asarray(prep["packed"].kind))
                     a["op"].append(prep["op"])
                     a["req"].append(prep["req"])
+                    a["failed"].append(out_row.failed)
                     a["bus_hold_ticks"] += int(
                         out_row.bus_hold.astype(np.int64).sum())
                     a["link_hold_ticks"] += int(
@@ -494,6 +553,7 @@ def stream_simulate(
             "kind": cat(a["kind"], np.int32),
             "op": cat(a["op"], np.int32),
             "req": cat(a["req"], np.int64),
+            "failed": cat(a["failed"], bool),
             "bus_hold_ticks": a["bus_hold_ticks"],
             "link_hold_ticks": a["link_hold_ticks"],
         }, n_requests, tenant))

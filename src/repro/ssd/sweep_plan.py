@@ -51,6 +51,7 @@ from __future__ import annotations
 import concurrent.futures
 import dataclasses
 import os
+import threading
 import time
 from typing import Sequence
 
@@ -160,6 +161,109 @@ _INFLIGHT: dict = {}
 _PROC_KEYS: set = set()
 _PROC = None
 
+# ---- self-healing compile backend (ISSUE 8) ------------------------------
+# The compile server is a scheduling hint with no correctness surface, but
+# a hint that HANGS (wedged process, SIGSTOP, swap death) used to cost the
+# 600s poll deadline per delegated key.  A _ServerWatchdog built on the
+# runtime fault-tolerance primitives closes that: the worker's heartbeat
+# thread touches a file ~1/s, a silent worker past REPRO_XC_WATCHDOG_S is
+# declared dead, and an alive-but-pathologically-slow worker is abandoned
+# by the straggler rule.  Either way every delegated key falls back to the
+# in-process compile path and the run completes — counted in
+# ``bench.PERF["xc_watchdog_trips"/"xc_watchdog_fallbacks"]``.
+_WATCHDOG_TIMEOUT_S = float(os.environ.get("REPRO_XC_WATCHDOG_S", "20.0"))
+_WATCHDOG = None
+_WD_LOCK = threading.Lock()
+
+
+class _ServerWatchdog:
+    """Liveness + progress tracking for one compile-server process.
+
+    ``HeartbeatMonitor`` consumes the worker's heartbeat file (mtime
+    changes become beats); ``StragglerDetector`` watches the wait time of
+    each delegated key relative to the median wait of the keys currently
+    being awaited, so one wedged key among progressing ones is flagged
+    after ``patience`` strikes even while heartbeats continue."""
+
+    # straggler observations are taken at this cadence, not per 50ms poll
+    # tick, so ``patience`` means "straggling for patience * period"
+    OBSERVE_PERIOD_S = 5.0
+
+    def __init__(self, hb_path: str, timeout_s: float = None, clock=None):
+        from repro.runtime.fault_tolerance import (HeartbeatMonitor,
+                                                   StragglerDetector)
+
+        self.hb_path = hb_path
+        self._clock = clock or time.monotonic
+        self.mon = HeartbeatMonitor(
+            ["xc_worker"],
+            timeout_s=(_WATCHDOG_TIMEOUT_S if timeout_s is None
+                       else timeout_s),
+            clock=clock,
+        )
+        self.strag = StragglerDetector(k=4.0, deadline_floor_s=60.0,
+                                       patience=3)
+        self.waits: dict = {}  # key -> wait start (perf_counter)
+        self._mtime = None
+        self._next_observe = self._clock() + self.OBSERVE_PERIOD_S
+        self.reason = None
+
+    def track(self, key: tuple) -> None:
+        with _WD_LOCK:
+            self.waits[key] = time.perf_counter()
+
+    def untrack(self, key: tuple) -> None:
+        with _WD_LOCK:
+            self.waits.pop(key, None)
+
+    def healthy(self) -> bool:
+        """Poll the heartbeat file + straggler clock; False once the
+        server should be abandoned (sticky)."""
+        with _WD_LOCK:
+            if self.reason is not None:
+                return False
+            try:
+                m = os.path.getmtime(self.hb_path)
+            except OSError:
+                m = None
+            if m is not None and m != self._mtime:
+                self._mtime = m
+                self.mon.beat("xc_worker")
+            if self.mon.dead_hosts():
+                self.reason = "heartbeat"
+                return False
+            now = self._clock()
+            if now >= self._next_observe and self.waits:
+                self._next_observe = now + self.OBSERVE_PERIOD_S
+                t = time.perf_counter()
+                durs = {str(k): t - t0 for k, t0 in self.waits.items()}
+                if self.strag.observe_step(durs):
+                    self.reason = "straggler"
+                    return False
+            return True
+
+
+def _fail_server(reason: str) -> int:
+    """Abandon the compile server: reclaim every delegated key for the
+    in-process compile path.  Idempotent; returns reclaimed-key count."""
+    global _PROC, _WATCHDOG
+    with _WD_LOCK:
+        n = len(_PROC_KEYS)
+        if n == 0 and _PROC is None:
+            return 0
+        _PROC_KEYS.clear()
+        proc, _PROC = _PROC, None
+        _WATCHDOG = None
+    if proc is not None and proc.poll() is None:
+        try:
+            proc.kill()
+        except OSError:
+            pass
+    perf = bench.PERF
+    perf["xc_watchdog_trips"] = perf.get("xc_watchdog_trips", 0) + 1
+    perf["xc_watchdog_reason"] = reason
+    return n
+
 
 def _proc_mode() -> bool:
     return (exec_cache.cache_dir() is not None
@@ -193,16 +297,25 @@ def _schedule_compiles(keys: list) -> None:
         # ~3s) and works through the rest of the preset
         local, remote = keys[:2], keys[2:]
         if remote:
+            global _WATCHDOG
             fd, path = tempfile.mkstemp(suffix=".xckeys")
             with os.fdopen(fd, "wb") as f:
                 import pickle
 
                 pickle.dump(remote, f)
+            # heartbeat file: the worker's beat thread touches it ~1/s
+            # from process start (before its jax import), the watchdog
+            # turns mtime changes into HeartbeatMonitor beats
+            hb_path = path + ".hb"
+            with open(hb_path, "w"):
+                pass
+            env = dict(os.environ, REPRO_XC_HEARTBEAT=hb_path)
             _PROC = subprocess.Popen(
                 [sys.executable, "-m", "repro.ssd.xc_worker", path],
-                env=dict(os.environ),
+                env=env,
             )
             _PROC_KEYS.update(remote)
+            _WATCHDOG = _ServerWatchdog(hb_path)
         for k in local:
             S.ensure_compiled(k)
     else:
@@ -213,11 +326,31 @@ def _schedule_compiles(keys: list) -> None:
 
 def _await_server(key: tuple):
     """Poll-future body: wait for the compile server to publish ``key``,
-    then load it; compile locally if the server dies or stalls."""
+    then load it; compile locally (in-process) if the server dies, hangs
+    past the heartbeat deadline, or straggles — the watchdog abandons the
+    server once, and every still-delegated key falls back immediately."""
+    wd = _WATCHDOG
+    if wd is not None:
+        wd.track(key)
     deadline = time.perf_counter() + 600.0
-    while (_proc_alive() and not exec_cache.has(key)
-           and time.perf_counter() < deadline):
-        time.sleep(0.05)
+    try:
+        while (_proc_alive() and not exec_cache.has(key)
+               and time.perf_counter() < deadline):
+            if wd is not None and not wd.healthy():
+                _fail_server(wd.reason or "unhealthy")
+                break
+            time.sleep(0.05)
+    finally:
+        if wd is not None:
+            wd.untrack(key)
+    if not exec_cache.has(key):
+        # the server never published this key — in-process fallback
+        if _PROC is not None and not _proc_alive() and _PROC.returncode != 0:
+            _fail_server("crashed")
+        perf = bench.PERF
+        perf["xc_watchdog_fallbacks"] = (
+            perf.get("xc_watchdog_fallbacks", 0) + 1
+        )
     return S.ensure_compiled(key)
 
 
@@ -535,6 +668,8 @@ def _dispatch(plan: _GroupPlan) -> dict:
               for name in S._PROMOTABLE),
             fc_valid=np.stack([np.asarray(ln.tables_row.fc_valid)
                                for ln in lanes]),
+            res_dead=np.stack([np.asarray(ln.tables_row.res_dead)
+                               for ln in lanes]),
         )
         txns = S.TxnArrays(*(
             np.stack([np.asarray(a) for a in cols], axis=1)
@@ -662,18 +797,25 @@ def _lower_runs(runs: list) -> tuple:
 
     Returns ``(prepared, pools)`` — ``prepared`` holds per-run
     ``(cfg, txns, designs, order, op, n)`` for result assembly, ``pools``
-    maps ``(sig, scout)`` to its :class:`_Lane` list."""
+    maps ``(sig, scout)`` to its :class:`_Lane` list.
+
+    A run may carry an optional sixth element, a ``designs.FaultSpec``:
+    its hardware faults lower into the lane tables (``res_dead`` rides as
+    a table argument, so faulted and fault-free lanes share executables)
+    and its read-retry ladder stretches the packed op ticks."""
     prepared = []
     pools: dict = {}
-    for run_idx, (cfg, txns, designs, seeds, decompose) in enumerate(runs):
+    for run_idx, run in enumerate(runs):
+        cfg, txns, designs, seeds, decompose = run[:5]
+        faults = run[5] if len(run) > 5 else None
         designs = tuple(designs)
         specs = resolve_specs(designs)
         order = S._nominal_order(cfg, txns)
         n = len(order)
-        packed, op = S._pack_txns(cfg, txns, order)
+        packed, op = S._pack_txns(cfg, txns, order, faults)
         prepared.append((cfg, txns, designs, order, op, n))
         confined = rows_confined(cfg, designs)
-        tables = lower_designs(cfg, designs)
+        tables = lower_designs(cfg, designs, faults)
         rows_np = np.asarray(packed.row)
         rows_ok = bool(
             np.array_equal(rows_np, np.asarray(packed.node) // cfg.cols)
@@ -712,7 +854,9 @@ def execute_sim_runs(runs: Sequence[tuple]) -> list:
     """Execute many sweeps as pooled, sharded lane groups.
 
     ``runs``: iterable of ``(cfg, txns, designs, seeds, decompose)`` —
-    ``seeds`` a per-lane tuple.  Returns per-run lists of
+    ``seeds`` a per-lane tuple — optionally extended with a sixth
+    element, a ``designs.FaultSpec`` to inject hardware faults into that
+    run's lanes.  Returns per-run lists of
     :class:`~repro.ssd.sim.SimResult`, each bit-identical to
     ``sim.simulate`` of that lane alone.
     """

@@ -22,9 +22,38 @@ import pickle
 import sys
 
 
+def _start_heartbeat() -> None:
+    """Touch the parent's heartbeat file ~1/s from a daemon thread.
+
+    Started before the jax import so the boot window beats too.  A
+    SIGKILLed, wedged (GIL-held C loop), or SIGSTOPped worker stops
+    beating; the parent's watchdog (``sweep_plan._ServerWatchdog``) then
+    reclaims every delegated key for in-process compilation."""
+    import os
+    import threading
+    import time
+
+    path = os.environ.get("REPRO_XC_HEARTBEAT")
+    if not path:
+        return
+
+    def _beat():
+        while True:
+            try:
+                with open(path, "w") as f:
+                    f.write(str(time.time()))
+            except OSError:
+                return  # parent cleaned up — stop quietly
+            time.sleep(1.0)
+
+    threading.Thread(target=_beat, daemon=True,
+                     name="xc-heartbeat").start()
+
+
 def main() -> None:
     import os
 
+    _start_heartbeat()
     with open(sys.argv[1], "rb") as f:
         keys = pickle.load(f)
     os.unlink(sys.argv[1])

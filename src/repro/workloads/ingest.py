@@ -88,6 +88,13 @@ def _parse_rows_blk(rows: list, base: int | None) -> tuple:
 
 _PARSERS = {"msr": _parse_rows_msr, "blktrace": _parse_rows_blk}
 
+# cheap per-row validity probes (same conversions the batch parsers apply,
+# scalar) — a row that passes its probe cannot fail the vectorized parse
+_VALIDATORS = {
+    "msr": lambda r: (int(r[0]), int(r[4]), int(r[5])),
+    "blktrace": lambda r: (float(r[0]), int(r[2]), int(r[3])),
+}
+
 
 def _is_header(line: str) -> bool:
     first = line.split(",", 1)[0].strip()
@@ -116,20 +123,33 @@ def sniff_format(path: str) -> str:
 
 
 def iter_trace_csv(
-    path: str, fmt: str = "auto", batch_requests: int = 65536
+    path: str, fmt: str = "auto", batch_requests: int = 65536,
+    on_error: str = "raise", stats: dict | None = None,
 ) -> Iterator[Dict[str, np.ndarray]]:
     """Stream a trace CSV as numpy batches of ≤ ``batch_requests`` rows.
 
     Each batch is a dict with raw (un-normalized) columns ``arrival_us``
     (rebased to the file's first data row), ``is_read``, ``offset_bytes``,
-    ``size_bytes``.  Malformed lines are skipped.  Memory is bounded by the
-    batch size — the file is never read whole.
+    ``size_bytes``.  Memory is bounded by the batch size — the file is
+    never read whole.
+
+    Corrupted rows (too few fields, or unparseable numeric columns) are
+    governed by ``on_error``: ``"raise"`` (default) raises ``ValueError``
+    naming the line, ``"skip"`` drops the row and counts it in
+    ``stats["skipped_rows"]`` (pass a dict to read the count back; clean
+    input is bit-identical under both modes).  Header/blank lines are
+    never errors.
     """
+    if on_error not in ("raise", "skip"):
+        raise ValueError(f"on_error must be 'raise' or 'skip', got {on_error!r}")
     if fmt == "auto":
         fmt = sniff_format(path)
     parse = _PARSERS[fmt]
+    check = _VALIDATORS[fmt]
     min_fields = 6 if fmt == "msr" else 4
     base = None
+    if stats is not None:
+        stats.setdefault("skipped_rows", 0)
 
     def flush(rows):
         nonlocal base
@@ -139,12 +159,25 @@ def iter_trace_csv(
 
     rows: list = []
     with _open_text(path) as f:
-        for line in f:
+        for lineno, line in enumerate(f, 1):
             line = line.strip()
             if not line or _is_header(line):
                 continue
             fields = line.split(",")
-            if len(fields) < min_fields:
+            try:
+                if len(fields) < min_fields:
+                    raise ValueError(
+                        f"{len(fields)} fields, {fmt!r} needs >= {min_fields}"
+                    )
+                check(fields)
+            except ValueError as e:
+                if on_error == "raise":
+                    raise ValueError(
+                        f"{path}:{lineno}: corrupted trace row "
+                        f"{line[:80]!r} ({e})"
+                    ) from None
+                if stats is not None:
+                    stats["skipped_rows"] += 1
                 continue
             rows.append(fields)
             if len(rows) >= batch_requests:
@@ -181,6 +214,7 @@ def load_trace(
     name: str | None = None,
     compact: bool = True,
     batch_requests: int | None = None,
+    on_error: str = "raise",
 ) -> Dict[str, np.ndarray]:
     """Parse a whole trace file to the canonical byte-trace dict.
 
@@ -188,6 +222,8 @@ def load_trace(
     any integer routes through the streamed iterator — both are pinned
     identical by the test suite.  ``compact=True`` remaps the sparse LUN
     address space onto a dense footprint (:func:`compact_footprint`).
+    ``on_error="skip"`` drops corrupted rows instead of raising; the drop
+    count is returned as ``trace["skipped_rows"]`` (0 on clean input).
     """
     if fmt == "auto":
         fmt = sniff_format(path)
@@ -198,10 +234,13 @@ def load_trace(
         name = os.path.splitext(base)[0]
     if batch_requests is None:
         batch_requests = 1 << 62  # one flush == whole file
-    batches = list(iter_trace_csv(path, fmt, batch_requests))
+    stats: dict = {}
+    batches = list(iter_trace_csv(path, fmt, batch_requests,
+                                  on_error=on_error, stats=stats))
     trace = _normalize(batches, name)
     if compact:
         trace = compact_footprint(trace)
+    trace["skipped_rows"] = int(stats.get("skipped_rows", 0))
     return trace
 
 
@@ -262,10 +301,11 @@ def write_msr_csv(trace: Dict[str, np.ndarray], path: str,
 
 
 def ingest_file(path: str, fmt: str = "auto", name: str | None = None,
-                compact: bool = True) -> str:
+                compact: bool = True, on_error: str = "raise") -> str:
     """Load + register a trace for replay-by-name; returns the name under
     which ``bench.run_workload`` / the scenario engine can now replay it."""
-    trace = load_trace(path, fmt=fmt, name=name, compact=compact)
+    trace = load_trace(path, fmt=fmt, name=name, compact=compact,
+                       on_error=on_error)
     register_trace(trace["name"], trace)
     return trace["name"]
 

@@ -24,6 +24,16 @@ Sprinkler/PALP argue conflict-resolution mechanisms must be evaluated on:
 * :class:`StreamReplay` — windowed replay of traces beyond the int32 tick
   budget through ``repro.ssd.stream.stream_simulate``: per-design QoS
   metrics over the full span plus per-window throughput telemetry.
+* :class:`DegradedModeSweep` — hardware-fault degradation curves (ISSUE
+  8): the same workload replayed under growing ``FaultSpec``s, reporting
+  each design's throughput **retention** (``iops_ok`` vs its own
+  fault-free run — timed-out requests are not service).  Placements map
+  the paper's degraded-mode asymmetry: one dead link per channel row
+  wipes out a shared-bus design's whole channels while Venice's adaptive
+  DFS routes around the same faults.  ``mid_trace_window`` instead
+  injects the faults at a streaming window boundary
+  (``stream_simulate(fault_schedule=...)``), modelling mid-trace fault
+  arrival with in-flight state carried across the failure.
 
 Every scenario lowers to ``repro.ssd.sweep_plan.execute_sim_runs`` batches
 — one planner call per feedback round — so its lanes pool into the same
@@ -51,8 +61,9 @@ from repro.traces.generator import (
 
 __all__ = [
     "QueueDepthSweep", "MultiTenantMix", "BurstScale", "StreamReplay",
+    "DegradedModeSweep", "degraded_fault_spec",
     "run_scenario", "run_queue_depth_sweeps", "run_stream_replay",
-    "design_metrics", "closed_loop_arrivals",
+    "run_degraded_mode", "design_metrics", "closed_loop_arrivals",
 ]
 
 DEFAULT_QDS = (1, 2, 4, 8, 16, 32, 64)
@@ -104,6 +115,34 @@ class BurstScale:
 
     workload: str
     factors: tuple = (1.0, 2.0, 4.0, 8.0)
+    n_requests: int | None = None
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradedModeSweep:
+    """Hardware-fault degradation sweep: throughput retention vs faults.
+
+    ``fault_counts`` are the sweep points (0 is the retention anchor and
+    is always run).  ``placement`` picks which links die at count ``k``:
+
+    * ``"per_channel"`` — the first ``k`` channel rows each lose one
+      horizontal link (the column is a seeded draw per row).  This is the
+      paper's asymmetry probe: a bus design loses the whole channel, a
+      mesh design loses one hop.
+    * ``"spread"`` — ``k`` links sampled without replacement mesh-wide.
+    * ``"clustered"`` — ``k`` consecutive link ids from a seeded start
+      (a localized failure region, the hardest case for minimal routing).
+
+    ``mid_trace_window`` (with ``window_s``) switches each point to a
+    windowed replay with the faults arriving at that window's start.
+    """
+
+    workload: str
+    fault_counts: tuple = (0, 1, 2, 4)
+    placement: str = "per_channel"
+    mid_trace_window: int | None = None
+    window_s: float = 10.0
     n_requests: int | None = None
     seed: int = 0
 
@@ -401,6 +440,105 @@ def run_burst_scale(cfg, scn: BurstScale, designs: Sequence[str]) -> Dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# degraded-mode fault sweep
+# ---------------------------------------------------------------------------
+
+
+def degraded_fault_spec(cfg, count: int, placement: str = "per_channel",
+                        seed: int = 0):
+    """Lower one sweep point to a ``FaultSpec`` (deterministic in seed).
+
+    Exposed for benchmarks/tests so a CSV row and an assertion can name
+    the exact same failed links."""
+    from repro.core.topology import build_mesh
+    from repro.ssd.designs import FaultSpec
+
+    if count <= 0:
+        return None
+    topo = build_mesh(cfg.rows, cfg.cols)
+    rng = np.random.default_rng(seed + 0xFA)
+    n_h = cfg.rows * (cfg.cols - 1)
+    if placement == "per_channel":
+        if cfg.cols < 2:
+            raise ValueError("per_channel placement needs cols >= 2")
+        rows = [r % cfg.rows for r in range(count)]
+        links = tuple(
+            int(r * (cfg.cols - 1) + rng.integers(0, cfg.cols - 1))
+            for r in rows
+        )
+    elif placement == "spread":
+        links = tuple(
+            int(x) for x in
+            rng.choice(topo.n_links, size=min(count, topo.n_links),
+                       replace=False)
+        )
+    elif placement == "clustered":
+        start = int(rng.integers(0, max(n_h - count, 1)))
+        links = tuple(range(start, min(start + count, topo.n_links)))
+    else:
+        raise ValueError(f"unknown placement {placement!r}")
+    return FaultSpec(failed_links=links)
+
+
+def run_degraded_mode(cfg, scn: DegradedModeSweep,
+                      designs: Sequence[str]) -> Dict:
+    """Run one degradation sweep; returns per-design retention curves."""
+    designs = tuple(designs)
+    n_req = scn.n_requests or default_n_requests(scn.workload)
+    counts = tuple(dict.fromkeys((0,) + tuple(scn.fault_counts)))
+    specs = {k: degraded_fault_spec(cfg, k, scn.placement, scn.seed)
+             for k in counts}
+    seeds = ((scn.seed + 7),) * len(designs)
+    per_count: Dict[int, list] = {}
+    if scn.mid_trace_window is None:
+        trace = trace_for(scn.workload, n_req, scn.seed)
+        txns = _decompose(cfg, trace)
+        runs = []
+        for k in counts:
+            run = (cfg, txns, designs, seeds, "auto")
+            runs.append(run if specs[k] is None else run + (specs[k],))
+        out = _simulate_batch(runs)
+        per_count = dict(zip(counts, out))
+    else:
+        from repro.ssd.stream import stream_simulate
+
+        trace = trace_for(scn.workload, n_req, scn.seed, monolithic=False)
+        t0 = time.perf_counter()
+        for k in counts:
+            schedule = ({} if specs[k] is None
+                        else {scn.mid_trace_window: specs[k]})
+            sr = stream_simulate(cfg, trace, designs, seeds=seeds,
+                                 window_s=scn.window_s,
+                                 fault_schedule=schedule)
+            per_count[k] = sr.results
+        bench.PERF["sim_s"] += time.perf_counter() - t0
+
+    base = {d: per_count[0][i].iops_ok() for i, d in enumerate(designs)}
+    per_design: Dict = {}
+    for i, d in enumerate(designs):
+        curve = {}
+        for k in counts:
+            res = per_count[k][i]
+            ok = res.iops_ok()
+            curve[str(k)] = {
+                "iops_ok": round(ok, 1),
+                "retention": round(ok / max(base[d], 1e-9), 4),
+                "failure_pct": round(res.failure_rate() * 100, 3),
+                "failed_links": list(getattr(specs[k], "failed_links", ())),
+            }
+        per_design[d] = curve
+    return {
+        "scenario": "degraded_mode",
+        "workload": scn.workload,
+        "placement": scn.placement,
+        "fault_counts": [int(k) for k in counts],
+        "mid_trace_window": scn.mid_trace_window,
+        "n_requests": n_req,
+        "designs": per_design,
+    }
+
+
 def run_scenario(cfg, scenario, designs: Sequence[str]) -> Dict:
     """Dispatch a declarative scenario spec to its engine."""
     if isinstance(scenario, QueueDepthSweep):
@@ -411,4 +549,6 @@ def run_scenario(cfg, scenario, designs: Sequence[str]) -> Dict:
         return run_burst_scale(cfg, scenario, designs)
     if isinstance(scenario, StreamReplay):
         return run_stream_replay(cfg, scenario, designs)
+    if isinstance(scenario, DegradedModeSweep):
+        return run_degraded_mode(cfg, scenario, designs)
     raise TypeError(f"unknown scenario {type(scenario).__name__}")

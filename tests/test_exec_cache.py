@@ -189,3 +189,36 @@ def test_entry_digest_covers_logical_key(xc_dir):
     k2 = ("lane", (2, 2, 2, 2, 1), 1024, 2, 1, True, (None,) * 12, 2)
     assert exec_cache.entry_digest(k1) != exec_cache.entry_digest(k2)
     assert exec_cache.entry_digest(k1) == exec_cache.entry_digest(k1)
+
+
+def test_stale_version_entry_degrades_to_compile(xc_dir, monkeypatch):
+    """Version skew (ISSUE 8): an entry planted under a stale jaxlib
+    salt is invisible to the current toolchain — a plain miss, never a
+    crash; a stale payload sitting AT the current digest (salt collision
+    / partial upgrade) errors exactly once, is tombstoned, and every
+    later lookup takes the deterministic recompile path."""
+    key = ("lane", "stale-jaxlib-probe")
+    monkeypatch.setenv("REPRO_XC_SALT", "jaxlib=0.0.0-stale")
+    exec_cache._version_salt.cache_clear()
+    stale_path = exec_cache._entry_path(exec_cache.entry_digest(key))
+    os.makedirs(xc_dir, exist_ok=True)
+    blob = pickle.dumps(("not-an-executable", None, None))
+    with open(stale_path, "wb") as f:
+        f.write(blob)
+    monkeypatch.delenv("REPRO_XC_SALT")
+    exec_cache._version_salt.cache_clear()
+    # the stale entry lives under a different digest: clean miss
+    assert exec_cache.entry_digest(key) not in os.path.basename(stale_path)
+    assert not exec_cache.has(key)
+    assert exec_cache.lookup(key) is None
+    assert exec_cache.STATS == {"hits": 0, "misses": 1, "errors": 0,
+                                "stores": 0, "tombstones": 0}
+    # same payload at the CURRENT digest: one error, then tombstone
+    with open(exec_cache._entry_path(exec_cache.entry_digest(key)),
+              "wb") as f:
+        f.write(blob)
+    assert exec_cache.lookup(key) is None
+    assert exec_cache.STATS["errors"] == 1
+    assert exec_cache.lookup(key) is None
+    assert exec_cache.STATS["tombstones"] == 1
+    assert exec_cache.STATS["errors"] == 1  # tombstone, not a re-error

@@ -1,0 +1,108 @@
+"""Unit tests for ``repro.runtime.fault_tolerance`` (ISSUE 8).
+
+The module backs the compile-server watchdog (``sweep_plan``), so its
+edge semantics are load-bearing: the heartbeat deadline is strict
+(``now - t > timeout``, not >=), straggler strikes reset on any on-time
+step, and ``replan_mesh`` never emits a mesh that splits a model-parallel
+group.
+"""
+import pytest
+
+from repro.runtime.fault_tolerance import (ElasticPlan, HeartbeatMonitor,
+                                           StragglerDetector, replan_mesh)
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+class TestHeartbeatMonitor:
+    def test_deadline_edge_is_strict(self):
+        clk = FakeClock()
+        mon = HeartbeatMonitor(["a", "b"], timeout_s=10.0, clock=clk)
+        clk.t = 10.0  # exactly at the deadline: still alive
+        assert mon.dead_hosts() == []
+        assert sorted(mon.alive()) == ["a", "b"]
+        clk.t = 10.0 + 1e-9  # one tick past: dead
+        assert sorted(mon.dead_hosts()) == ["a", "b"]
+        assert mon.alive() == []
+
+    def test_beat_resets_deadline(self):
+        clk = FakeClock()
+        mon = HeartbeatMonitor(["a", "b"], timeout_s=10.0, clock=clk)
+        clk.t = 9.0
+        mon.beat("a")
+        clk.t = 15.0  # b is 15s silent, a only 6s
+        assert mon.dead_hosts() == ["b"]
+        assert mon.alive() == ["a"]
+        mon.beat("b")  # a late beat resurrects
+        assert mon.dead_hosts() == []
+
+    def test_construction_anchors_now(self):
+        clk = FakeClock(100.0)
+        mon = HeartbeatMonitor(["a"], timeout_s=1.0, clock=clk)
+        assert mon.dead_hosts() == []  # not dead at birth
+
+
+class TestStragglerDetector:
+    def test_patience_accumulates_then_flags(self):
+        det = StragglerDetector(k=2.0, deadline_floor_s=0.0, patience=3)
+        step = {"a": 1.0, "b": 1.0, "c": 10.0}  # deadline = 2*1.0
+        assert det.observe_step(step) == []
+        assert det.observe_step(step) == []
+        assert det.observe_step(step) == ["c"]  # third strike
+        assert det.observe_step(step) == ["c"]  # stays flagged
+
+    def test_on_time_step_resets_strikes(self):
+        det = StragglerDetector(k=2.0, deadline_floor_s=0.0, patience=2)
+        slow = {"a": 1.0, "b": 1.0, "c": 10.0}
+        ok = {"a": 1.0, "b": 1.0, "c": 1.0}
+        assert det.observe_step(slow) == []
+        assert det.observe_step(ok) == []  # strike reset
+        assert det.observe_step(slow) == []  # back to one strike
+        assert det.observe_step(slow) == ["c"]
+
+    def test_deadline_floor_masks_fast_steps(self):
+        """Sub-floor jitter is never a strike: 3x the median still beats
+        the absolute floor."""
+        det = StragglerDetector(k=2.0, deadline_floor_s=1.0, patience=1)
+        assert det.observe_step({"a": 0.1, "b": 0.1, "c": 0.3}) == []
+        # past the floor the relative rule takes over
+        assert det.observe_step({"a": 1.0, "b": 1.0, "c": 3.0}) == ["c"]
+
+    def test_empty_step_is_noop(self):
+        det = StragglerDetector(patience=1)
+        assert det.observe_step({}) == []
+
+
+class TestReplanMesh:
+    def test_too_few_survivors_raises(self):
+        with pytest.raises(ValueError):
+            replan_mesh(15, model_parallel=16)
+        replan_mesh(16, model_parallel=16)  # boundary survives
+
+    def test_whole_pod_slices_keep_full_data_axis(self):
+        plan = replan_mesh(1024, model_parallel=16)
+        assert (plan.pods, plan.data, plan.model) == (4, 16, 16)
+        assert plan.devices == 1024
+        assert plan.global_batch == 4 * 16
+
+    def test_sub_slice_shrinks_data_axis(self):
+        plan = replan_mesh(255, model_parallel=16)  # < one 256-dev slice
+        assert plan.pods == 1
+        assert plan.data == 255 // 16 == 15
+        assert plan.model == 16
+        assert plan.devices <= 255
+
+    def test_reshard_only_when_shape_changes(self):
+        prev = replan_mesh(512, model_parallel=16)
+        assert prev.reshard  # no prior plan
+        same = replan_mesh(512, model_parallel=16, prev=prev)
+        assert not same.reshard
+        shrunk = replan_mesh(511, model_parallel=16, prev=prev)
+        assert shrunk.reshard
+        assert isinstance(shrunk, ElasticPlan)

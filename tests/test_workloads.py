@@ -251,3 +251,61 @@ class TestCharacterize:
             characterize({"arrival_us": np.zeros(0), "is_read": np.zeros(0),
                           "offset_bytes": np.zeros(0, np.int64),
                           "size_bytes": np.zeros(0, np.int64)})
+
+
+class TestCorruptedRows:
+    """``on_error``: strict by default, skip-and-count on request, and
+    bit-identical to the strict path on clean input (ISSUE 8)."""
+
+    @pytest.fixture()
+    def corrupted(self, tmp_path):
+        """The msr fixture with three corrupted rows spliced in: a
+        truncated row, a non-numeric offset, and a garbage line."""
+        lines = open(FIXTURE).read().splitlines()
+        bad = ["129000000000000099,anon,0,Read,12345",         # 5 fields
+               "129000000000000101,anon,0,Write,oops,4096,0",  # bad offset
+               "129000000000000103,anon,0,Read,4096,huge,0"]   # bad size
+        # (a line whose FIRST field is non-numeric reads as a header and
+        # is silently skipped in both modes — deliberately not an error)
+        spliced = lines[:5] + bad[:1] + lines[5:40] + bad[1:] + lines[40:]
+        p = tmp_path / "corrupt.csv"
+        p.write_text("\n".join(spliced) + "\n")
+        return str(p)
+
+    def test_raise_names_the_line(self, corrupted):
+        with pytest.raises(ValueError, match=r"corrupt\.csv:6: corrupted"):
+            load_trace(corrupted)
+        with pytest.raises(ValueError):
+            list(iter_trace_csv(corrupted))  # default is strict
+
+    def test_skip_counts_and_keeps_good_rows(self, corrupted):
+        clean = load_trace(FIXTURE, compact=False)
+        tr = load_trace(corrupted, compact=False, on_error="skip")
+        assert tr["skipped_rows"] == 3
+        for k in ("arrival_us", "is_read", "offset_bytes", "size_bytes"):
+            assert np.array_equal(tr[k], clean[k]), k
+        stats = {}
+        n = sum(len(b["arrival_us"]) for b in
+                iter_trace_csv(corrupted, on_error="skip", stats=stats))
+        assert stats["skipped_rows"] == 3
+        assert n == len(clean["arrival_us"])
+
+    def test_clean_input_identical_under_both_modes(self):
+        strict = load_trace(FIXTURE)
+        skip = load_trace(FIXTURE, on_error="skip")
+        assert strict["skipped_rows"] == skip["skipped_rows"] == 0
+        for k in ("arrival_us", "is_read", "offset_bytes", "size_bytes",
+                  "footprint_bytes"):
+            assert np.array_equal(strict[k], skip[k]), k
+
+    def test_bad_mode_rejected(self):
+        with pytest.raises(ValueError, match="on_error"):
+            list(iter_trace_csv(FIXTURE, on_error="ignore"))
+
+    def test_ingest_file_threads_on_error(self, corrupted):
+        name = ingest_file(corrupted, name="test_corrupt",
+                           on_error="skip")
+        assert name == "test_corrupt"
+        from repro.traces.generator import CUSTOM_TRACES
+        assert len(CUSTOM_TRACES["test_corrupt"]["arrival_us"]) \
+            == len(load_trace(FIXTURE)["arrival_us"])
