@@ -1,96 +1,153 @@
-"""Non-blocking perf-regression probe for the CI fast lane.
+"""Perf-regression probe for the CI fast lane.
 
 Compares a fresh ``--smoke`` BENCH_*.json against the committed baseline
 and prints a GitHub Actions ``::warning::`` annotation when ``total_s``
 regresses by more than the threshold.  Also checks the streaming-engine
 leg's per-window throughput within the fresh run: the last window dropping
 more than the threshold below the first means window prep/compile stopped
-overlapping execution.  Always exits 0: CI runner timing is
-noisy (shared vCPUs), so this is a tripwire for humans, not a gate — real
+overlapping execution.
+
+By default the probe is **fail-open** — always exits 0: CI runner timing
+is noisy (shared vCPUs), so it is a tripwire for humans, not a gate — real
 perf acceptance happens on the committed quick-preset BENCH artifacts.
+``--strict`` turns it into a gate: exit 1 when any regression tripped,
+exit 2 when the probe could not evaluate (missing file, preset mismatch,
+schema drift).  Either way a machine-readable
+``check_perf_summary.json`` lands next to the fresh artifact with the
+status, every finding, and the numbers behind them.
 
   python -m benchmarks.check_perf results/BENCH_smoke.json \
-      results/BENCH_smoke_baseline.json [--threshold 0.30]
+      results/BENCH_smoke_baseline.json [--threshold 0.30] [--strict]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 
-def main() -> None:
+def _compare(fresh: dict, base: dict, threshold: float) -> dict:
+    """Pure comparison: {status, findings, totals} — no I/O, unit-testable."""
+    findings = []
+    summary: dict = {"status": "ok", "findings": findings}
+    if fresh.get("preset") != base.get("preset"):
+        summary["status"] = "skipped"
+        summary["reason"] = (f"preset mismatch ({fresh.get('preset')} vs "
+                             f"baseline {base.get('preset')})")
+        return summary
+    t_new, t_old = float(fresh["total_s"]), float(base["total_s"])
+    ratio = t_new / max(t_old, 1e-9)
+    summary["total_s"] = {"fresh": t_new, "baseline": t_old,
+                          "ratio": round(ratio, 4)}
+    if ratio > 1.0 + threshold:
+        findings.append({
+            "kind": "total_regression",
+            "detail": (f"total {t_new:.1f}s vs baseline {t_old:.1f}s "
+                       f"({ratio:.2f}x)"),
+            "fresh_s": t_new, "baseline_s": t_old,
+        })
+    # per-phase breakdown: phases are compared only when BOTH runs have
+    # them, so a baseline predating a new phase (e.g. ``tail``) never
+    # trips the probe — new phases are reported informationally and
+    # start being compared once the baseline is regenerated
+    ph_new = fresh.get("phases") or {}
+    ph_old = base.get("phases") or {}
+    summary["phases_not_in_baseline"] = sorted(ph_new.keys() - ph_old.keys())
+    for name in sorted(ph_new.keys() & ph_old.keys()):
+        s_new = float(ph_new[name].get("s", 0.0) or 0.0)
+        s_old = float(ph_old[name].get("s", 0.0) or 0.0)
+        if s_old >= 1.0 and s_new > s_old * (1.0 + threshold):
+            findings.append({
+                "kind": "phase_regression", "phase": name,
+                "detail": f"{name}: {s_new:.1f}s vs baseline {s_old:.1f}s",
+                "fresh_s": s_new, "baseline_s": s_old,
+            })
+    # streaming engine flatness (within the fresh run, no baseline
+    # needed): prep/compile are supposed to hide behind execution, so
+    # a last window markedly slower than steady state means the
+    # pipeline stopped overlapping.  The first nonempty window is
+    # warm-up (one-time executable load) and is skipped.
+    wins = [w for w in (fresh.get("stream") or {}).get("windows", [])
+            if w.get("n_requests")]
+    if len(wins) > 2:
+        wins = wins[1:]  # drop warm-up
+    if len(wins) >= 2:
+        tp_first = float(wins[0]["ios_per_wallclock_s"])
+        tp_last = float(wins[-1]["ios_per_wallclock_s"])
+        summary["stream"] = {"steady_ios_s": tp_first, "last_ios_s": tp_last}
+        if tp_first > 0 and tp_last < tp_first * (1.0 - threshold):
+            findings.append({
+                "kind": "stream_droop",
+                "detail": (f"last window {tp_last:.0f} IO/s vs steady-state "
+                           f"window {tp_first:.0f} IO/s "
+                           f"({tp_last / tp_first:.2f}x)"),
+                "steady_ios_s": tp_first, "last_ios_s": tp_last,
+            })
+    if findings:
+        summary["status"] = "regressed"
+    return summary
+
+
+def _write_summary(fresh_path: str, summary: dict) -> None:
+    """Best-effort ``check_perf_summary.json`` next to the fresh artifact."""
+    out = os.path.join(os.path.dirname(fresh_path) or ".",
+                       "check_perf_summary.json")
+    try:
+        with open(out, "w") as f:
+            json.dump(summary, f, indent=2)
+        print(f"[check_perf] summary written to {out}")
+    except OSError as e:
+        print(f"::warning::check_perf summary not written: {e}")
+
+
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("fresh", help="BENCH_*.json from this CI run")
     ap.add_argument("baseline", help="committed baseline BENCH_*.json")
     ap.add_argument("--threshold", type=float, default=0.30,
                     help="warn when total_s exceeds baseline by this "
                          "fraction (default 0.30)")
-    args = ap.parse_args()
+    ap.add_argument("--strict", action="store_true",
+                    help="gate mode: exit 1 on any regression, 2 when the "
+                         "probe could not evaluate (default: warn-only, "
+                         "always exit 0)")
+    args = ap.parse_args(argv)
 
-    # a tripwire must never trip the lane itself: any surprise (missing
-    # file, renamed field, null value) degrades to a warning, not a failure
+    # in the default mode a tripwire must never trip the lane itself: any
+    # surprise (missing file, renamed field, null value) degrades to a
+    # warning — --strict upgrades both regressions and surprises to
+    # nonzero exits
     try:
         with open(args.fresh) as f:
             fresh = json.load(f)
         with open(args.baseline) as f:
             base = json.load(f)
-        if fresh.get("preset") != base.get("preset"):
-            print(f"::warning::perf probe skipped: preset mismatch "
-                  f"({fresh.get('preset')} vs baseline "
-                  f"{base.get('preset')})")
-            return
-        t_new, t_old = float(fresh["total_s"]), float(base["total_s"])
-        ratio = t_new / max(t_old, 1e-9)
-        detail = (
-            f"total {t_new:.1f}s vs baseline {t_old:.1f}s ({ratio:.2f}x); "
-            f"sim {fresh.get('sim_s_total')}s vs {base.get('sim_s_total')}s, "
-            f"ftl {fresh.get('ftl_s_total')}s vs {base.get('ftl_s_total')}s, "
-            f"compile {fresh.get('compile_s_total')}s vs "
-            f"{base.get('compile_s_total')}s"
-        )
-        # per-phase breakdown: phases are compared only when BOTH runs have
-        # them, so a baseline predating a new phase (e.g. ``tail``) never
-        # trips the probe — new phases are reported informationally and
-        # start being compared once the baseline is regenerated
-        ph_new = fresh.get("phases") or {}
-        ph_old = base.get("phases") or {}
-        for name in ph_new.keys() - ph_old.keys():
-            print(f"[check_perf] phase '{name}' "
-                  f"({ph_new[name].get('s')}s) not in baseline — skipped")
-        for name in sorted(ph_new.keys() & ph_old.keys()):
-            s_new = float(ph_new[name].get("s", 0.0) or 0.0)
-            s_old = float(ph_old[name].get("s", 0.0) or 0.0)
-            if s_old >= 1.0 and s_new > s_old * (1.0 + args.threshold):
-                print(f"::warning title=bench --smoke phase regression::"
-                      f"{name}: {s_new:.1f}s vs baseline {s_old:.1f}s")
-        # streaming engine flatness (within the fresh run, no baseline
-        # needed): prep/compile are supposed to hide behind execution, so
-        # a last window markedly slower than steady state means the
-        # pipeline stopped overlapping.  The first nonempty window is
-        # warm-up (one-time executable load) and is skipped.
-        wins = [w for w in (fresh.get("stream") or {}).get("windows", [])
-                if w.get("n_requests")]
-        if len(wins) > 2:
-            wins = wins[1:]  # drop warm-up
-        if len(wins) >= 2:
-            tp_first = float(wins[0]["ios_per_wallclock_s"])
-            tp_last = float(wins[-1]["ios_per_wallclock_s"])
-            if tp_first > 0 and tp_last < tp_first * (1.0 - args.threshold):
-                print(f"::warning title=stream throughput droop::last "
-                      f"window {tp_last:.0f} IO/s vs steady-state window "
-                      f"{tp_first:.0f} IO/s "
-                      f"({tp_last / tp_first:.2f}x, threshold "
-                      f"{1.0 - args.threshold:.2f}x)")
+        summary = _compare(fresh, base, args.threshold)
     except Exception as e:  # noqa: BLE001
-        print(f"::warning::perf probe skipped: {type(e).__name__}: {e}")
-        return
-    if ratio > 1.0 + args.threshold:
-        print(f"::warning title=bench --smoke regression::{detail}")
-    else:
-        print(f"[check_perf] OK: {detail}")
+        summary = {"status": "skipped",
+                   "reason": f"{type(e).__name__}: {e}", "findings": []}
+    summary["threshold"] = args.threshold
+    summary["strict"] = bool(args.strict)
+    _write_summary(args.fresh, summary)
+
+    if summary["status"] == "skipped":
+        print(f"::warning::perf probe skipped: {summary.get('reason')}")
+        return 2 if args.strict else 0
+    for fnd in summary["findings"]:
+        title = {"total_regression": "bench --smoke regression",
+                 "phase_regression": "bench --smoke phase regression",
+                 "stream_droop": "stream throughput droop"}[fnd["kind"]]
+        print(f"::warning title={title}::{fnd['detail']}")
+    for name in summary.get("phases_not_in_baseline", []):
+        print(f"[check_perf] phase '{name}' not in baseline — skipped")
+    if summary["status"] == "ok":
+        t = summary["total_s"]
+        print(f"[check_perf] OK: total {t['fresh']:.1f}s vs baseline "
+              f"{t['baseline']:.1f}s ({t['ratio']:.2f}x)")
+        return 0
+    return 1 if args.strict else 0
 
 
 if __name__ == "__main__":
-    main()
-    sys.exit(0)
+    sys.exit(main())

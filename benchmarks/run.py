@@ -453,9 +453,23 @@ def main() -> None:
                     metavar="PATH",
                     help="write a BENCH_*.json perf-trajectory artifact "
                          "(ftl_s/sim_s per phase + per-design speedups)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace-event JSON (Perfetto "
+                         "loadable): per-transaction device timelines + "
+                         "resource occupancy tracks AND harness "
+                         "compile/dispatch/stream spans in one view; a "
+                         "resource-utilization/conflict heatmap CSV lands "
+                         "next to it.  Reconstructed from SimResult arrays "
+                         "after the fact — figure CSVs stay byte-identical")
     args = ap.parse_args()
     if args.smoke and args.full:
         raise SystemExit("--smoke and --full are mutually exclusive")
+
+    if args.trace_out:
+        from repro import obs
+
+        obs.enable_tracing(xc_sidecar=args.trace_out + ".xc.jsonl")
+    from repro.obs import spans as obs_spans
 
     bench.FTL_ENGINE = args.ftl_engine
     if args.lane_backend is not None:
@@ -520,7 +534,8 @@ def main() -> None:
         w0, o0 = bench.PERF["compile_wait_s"], bench.PERF["compile_overlap_s"]
         bench.PERF["phase"] = name  # run-cache provenance (bench.WorkloadRun)
         try:
-            out = fn(*a, **kw)
+            with obs_spans.span("phase", name):
+                out = fn(*a, **kw)
         finally:
             bench.PERF["phase"] = None
         cache = bench.PERF["phase_cache"].get(name, {})
@@ -677,6 +692,15 @@ def main() -> None:
         with open(path, "w") as f:
             json.dump(artifact, f, indent=2)
         print(f"[benchmarks] perf trajectory written to {path}")
+
+    if args.trace_out:
+        from repro import obs
+
+        heat = os.path.splitext(args.trace_out)[0] + ".heatmap.csv"
+        info = obs.export_trace(args.trace_out, heatmap_csv=heat)
+        print(f"[benchmarks] trace written to {args.trace_out} "
+              f"({info['n_events']} events, {info['n_txn']} transactions); "
+              f"heatmap in {heat}")
 
 
 if __name__ == "__main__":

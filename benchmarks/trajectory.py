@@ -67,7 +67,8 @@ def rows_for(arts: list) -> tuple:
     phases = [p for p in PHASE_ORDER
               if any(p in (a.get("phases") or {}) for _, a in arts)]
     header = (["artifact", "total_s", "ftl_s", "sim_s", "compile_s",
-               "exec_s", "groups", "cache_hits(xc)", "batched%", "kernels"]
+               "exec_s", "cwait_s", "covl_s", "groups", "cache_hits(xc)",
+               "batched%", "kernels"]
               + [f"{p}_s" for p in phases])
     rows = []
     for name, art in arts:
@@ -81,6 +82,8 @@ def rows_for(arts: list) -> tuple:
              _fmt(art.get("sim_s_total")),
              _fmt(art.get("compile_s_total"), 2),
              _fmt(art.get("exec_s_total"), 2),
+             _fmt(art.get("compile_wait_s"), 2),
+             _fmt(art.get("compile_overlap_s"), 2),
              str(len(groups)) if isinstance(groups, list) else "-",
              str(xc.get("hits", "-")), share_s, be_s]
             + [_fmt((ph.get(p) or {}).get("s")) for p in phases]
@@ -99,7 +102,9 @@ def render(results_dir: str) -> str:
                  "benchmarks.trajectory`.  Ordering: `generated_at`, then "
                  "file mtime, then name.  Wall-clock fields are seconds; "
                  "`cache_hits(xc)` counts executables served from the "
-                 "persistent AOT store (warm runs); `batched%` is the share "
+                 "persistent AOT store (warm runs); `cwait_s`/`covl_s` split "
+                 "background compilation into dispatcher stall vs time "
+                 "hidden behind execution; `batched%` is the share "
                  "of lane-steps run by the batched static step and `kernels` "
                  "the per-backend group counts (xla / pallas-interpret / "
                  "pallas-compiled).")

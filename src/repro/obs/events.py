@@ -1,0 +1,329 @@
+"""Device flight recorder: per-transaction timelines from post-scan arrays.
+
+The jitted scan already emits everything a timeline needs — per-transaction
+``completion``, ``wait``, ``hops``, ``tries``, ``scout_steps`` — and the
+step's timing algebra is deterministic, so the recorder reconstructs event
+timelines *after* the scan from those outputs plus the lane's lowered
+timing scalars.  Nothing is added to the scan carry: executables, cache
+keys and figure CSVs are byte-identical with the recorder on or off (the
+hook sites in ``sweep_plan``/``stream`` are one ``is None`` check).
+
+Reconstruction (exact, vectorized numpy; see DESIGN.md §9):
+
+* ``t0`` (service-candidate time, ``max(arrival, plane_free)``) is replayed
+  host-side: within each plane, the scan serializes transactions —
+  ``plane_free`` after a transaction is its ``done`` — so a grouped
+  shift of completions reproduces every ``t0`` bit-exactly for both step
+  kinds.
+* **Statically-routed lanes**: phase durations come straight from the step
+  formulas (``d0 = ovh + cmd (+xfer for writes)``, flash op, ``d1 = ovh +
+  xfer`` for reads) and ``completion = t0 + wait + d0 + op (+ d1)`` holds
+  identically.  Only the *placement* of ``wait`` is canonicalized (all of
+  it immediately after ``t0``; the scan may split it across the two bus
+  phases of a read) — durations are exact.
+* **Scout lanes (venice)**: the committed circuit is
+  ``[t_resv, commit_end)`` with ``commit_end = completion`` for reads and
+  ``completion - op`` for writes/erases, circuit length from the same
+  cmd/xfer algebra, and the scout round-trip from ``scout_steps``/``hops``
+  — all recovered from outputs.  FC/chip availability stalls that the
+  scan folds into the schedule (not into ``wait``) appear as the residual
+  between arrival and reservation.
+* **Failed transactions** (dead path, ISSUE 8) occupy nothing and render
+  as a ``FAIL_TIMEOUT``-long "timeout" slice.
+
+Per-window streamed runs append with their absolute int64 tick base; the
+concatenation of a stream's windows is the monolithic nominal order, so a
+streamed trace is event-identical to the monolithic trace of the same
+prefix (pinned by ``tests/test_obs.py``).
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+from repro.ssd.config import TICK_NS
+
+__all__ = ["DeviceRecorder", "RECORDER", "derive_timeline"]
+
+# Mirrors ``sim.FAIL_TIMEOUT`` (obs never imports sim: sim imports jax and
+# also hooks back into this module).  Pinned equal by tests/test_obs.py.
+FAIL_TIMEOUT = 1 << 20
+
+KIND_READ = 0
+
+# LaneTables per-design scalars the reconstruction needs.
+_SCALARS = ("ovh", "cmd_base_ns", "xfer_num", "xfer_den", "hop_ns",
+            "count_bus", "hold", "fc_nearest")
+
+_ARRAY_FIELDS = ("arrival", "completion", "wait", "conflict", "hops",
+                 "tries", "scout_steps", "misroutes", "failed", "kind",
+                 "op", "node", "row", "plane", "nbytes")
+
+
+def _scalars_of(tables_row) -> dict:
+    out = {}
+    for name in _SCALARS:
+        v = np.asarray(getattr(tables_row, name))
+        out[name] = bool(v) if v.dtype == bool else int(v)
+    return out
+
+
+class DeviceRecorder:
+    """Accumulates per-run (or per-stream-window) transaction arrays.
+
+    ``max_txns`` bounds memory and trace size: a run that would cross the
+    budget is counted in ``dropped_runs`` instead of being truncated
+    mid-run (a partial timeline is worse than an honest gap); the export
+    surfaces the drop in the trace metadata.
+    """
+
+    def __init__(self, max_txns: int = 400_000):
+        self.max_txns = max_txns
+        self.dropped_runs = 0
+        self.dropped_txns = 0
+        self._runs: list[dict] = []
+        self._streams: dict = {}  # (stream_id, design) -> run dict
+        self._total = 0
+        self._next_stream = 0
+        self._pending_faults: dict = {}
+        self._lock = threading.Lock()
+
+    # ---- identity -------------------------------------------------------
+    def stream_token(self) -> int:
+        with self._lock:
+            self._next_stream += 1
+            return self._next_stream
+
+    # ---- recording ------------------------------------------------------
+    def _admit(self, n: int) -> bool:
+        with self._lock:
+            if self._total + n > self.max_txns:
+                self.dropped_runs += 1
+                self.dropped_txns += n
+                return False
+            self._total += n
+            return True
+
+    def record_run(self, cfg, design: str, txns, order, op, outs, n: int,
+                   tables_row, is_scout: bool, label: str = "") -> None:
+        """One monolithic lane result, in scan (nominal-ordered) space —
+        called from ``sweep_plan.execute_sim_runs`` next to
+        ``_finish_result`` with the same ingredients."""
+        if n == 0 or not self._admit(n):
+            return
+
+        def f(name):
+            return np.asarray(txns[name])[order].astype(np.int64)
+
+        run = self._new_run(cfg, design, tables_row, is_scout, label)
+        self._append(run, {
+            "arrival": f("arrival"),
+            "kind": f("kind"),
+            "node": f("node"),
+            "row": f("row"),
+            "plane": f("plane"),
+            "nbytes": f("nbytes"),
+            "op": np.asarray(op[:n], np.int64),
+        }, outs, n, base=0)
+        with self._lock:
+            self._runs.append(run)
+
+    def record_window(self, cfg, design: str, packed, op, out_row,
+                      base: int, n: int, arrival_abs, tables_row,
+                      is_scout: bool, stream_id: int,
+                      label: str = "") -> None:
+        """One streamed window for one design lane; ``base = w * W`` shifts
+        window-frame completions to absolute int64 ticks.  Windows of one
+        ``(stream_id, design)`` accumulate into a single run whose
+        concatenation equals the monolithic timeline."""
+        if n == 0 or not self._admit(n):
+            return
+        key = (stream_id, design)
+        with self._lock:
+            run = self._streams.get(key)
+            if run is None:
+                run = self._new_run(cfg, design, tables_row, is_scout,
+                                    label or f"stream{stream_id}")
+                self._streams[key] = run
+                self._runs.append(run)
+        self._append(run, {
+            "arrival": np.asarray(arrival_abs, np.int64),
+            "kind": np.asarray(packed.kind[:n], np.int64),
+            "node": np.asarray(packed.node[:n], np.int64),
+            "row": np.asarray(packed.row[:n], np.int64),
+            "plane": np.asarray(packed.plane[:n], np.int64),
+            "nbytes": np.asarray(packed.nbytes[:n], np.int64),
+            "op": np.asarray(op[:n], np.int64),
+        }, out_row, n, base=base)
+
+    def record_fault_swap(self, design: str, t_tick: int, tables_row,
+                          n_nodes: int, stream_id: int | None = None) -> None:
+        """A FaultSpec took effect at ``t_tick``: note the dead chips (their
+        tracks render a termination marker) and the count of dead
+        links/FCs."""
+        res_dead = np.asarray(tables_row.res_dead, bool)
+        dead_chips = np.flatnonzero(res_dead[-n_nodes:]) if n_nodes else []
+        marker = {
+            "t_tick": int(t_tick),
+            "dead_chips": [int(c) for c in dead_chips],
+            "n_dead_other": int(res_dead[:-n_nodes].sum()) if n_nodes
+            else int(res_dead.sum()),
+        }
+        with self._lock:
+            if stream_id is not None:
+                run = self._streams.get((stream_id, design))
+                if run is not None:
+                    run["faults"].append(marker)
+                    return
+            self._pending_faults.setdefault(design, []).append(marker)
+
+    # ---- internals ------------------------------------------------------
+    def _new_run(self, cfg, design, tables_row, is_scout, label) -> dict:
+        run = {
+            "design": design,
+            "label": label,
+            "is_scout": bool(is_scout),
+            "rows": cfg.rows,
+            "cols": cfg.cols,
+            "n_nodes": cfg.rows * cfg.cols,
+            "n_planes": cfg.n_planes,
+            "scout_hop_ns": int(round(cfg.scout_flit_ns)),
+            "scalars": _scalars_of(tables_row),
+            "faults": list(self._pending_faults.pop(design, ())),
+            "chunks": {f: [] for f in _ARRAY_FIELDS},
+        }
+        return run
+
+    def _append(self, run: dict, fields: dict, outs, n: int,
+                base: int) -> None:
+        ch = run["chunks"]
+        ch["completion"].append(
+            np.asarray(outs.completion[:n], np.int64) + base)
+        ch["wait"].append(np.asarray(outs.wait[:n], np.int64))
+        ch["conflict"].append(np.asarray(outs.conflict[:n], bool))
+        ch["hops"].append(np.asarray(outs.hops[:n], np.int64))
+        ch["tries"].append(np.asarray(outs.tries[:n], np.int64))
+        ch["scout_steps"].append(np.asarray(outs.scout_steps[:n], np.int64))
+        ch["misroutes"].append(np.asarray(outs.misroutes[:n], np.int64))
+        failed = getattr(outs, "failed", None)
+        ch["failed"].append(np.asarray(failed[:n], bool) if failed is not None
+                            else np.zeros((n,), bool))
+        for name, arr in fields.items():
+            ch[name].append(arr)
+
+    def finalized_runs(self) -> list[dict]:
+        """Concatenate each run's window chunks into flat arrays (idempotent
+        — safe to export more than once)."""
+        with self._lock:
+            runs = list(self._runs)
+        out = []
+        for run in runs:
+            r = dict(run)
+            r.pop("chunks")
+            for f in _ARRAY_FIELDS:
+                chunks = run["chunks"][f]
+                r[f] = (np.concatenate(chunks) if chunks
+                        else np.zeros((0,), np.int64))
+            r["n"] = len(r["completion"])
+            out.append(r)
+        return out
+
+
+# The one process-wide recorder; None = disabled (see ``repro.obs``).
+# Hook sites read this global and skip everything when it is None.
+RECORDER: DeviceRecorder | None = None
+
+
+def _ceil_div(a, b):
+    return -(-a // b)
+
+
+def _tcand(plane: np.ndarray, arrival: np.ndarray,
+           completion: np.ndarray) -> np.ndarray:
+    """Replay ``t0 = max(arrival, plane_free)`` from completions.
+
+    The scan serializes each plane: ``plane_free`` seen by a transaction is
+    the ``done`` of the previous transaction on its plane (in scan order).
+    A stable plane-grouped shift of ``completion`` therefore reproduces
+    every candidate time exactly, for both step kinds."""
+    n = len(plane)
+    if n == 0:
+        return np.zeros((0,), np.int64)
+    idx = np.argsort(plane, kind="stable")  # groups planes, keeps scan order
+    p = plane[idx]
+    prev = np.empty((n,), np.int64)
+    prev[0] = 0
+    prev[1:] = completion[idx][:-1]
+    first = np.empty((n,), bool)
+    first[0] = True
+    first[1:] = p[1:] != p[:-1]
+    prev[first] = 0
+    t0 = np.maximum(arrival[idx], prev)
+    out = np.empty((n,), np.int64)
+    out[idx] = t0
+    return out
+
+
+def derive_timeline(run: dict) -> dict:
+    """Exact per-transaction phase/interval reconstruction for one
+    finalized run (see module docstring for the algebra).
+
+    Returns numpy arrays (ticks, int64):
+      ``t0``            candidate/service-queue exit time per txn
+      ``queue``         ``t0 - arrival``
+      ``phases``        dict of canonical phase durations
+      ``occ``           list of ``(start, end, mask)`` resource-occupancy
+                        segments — held on the chip (and, for bus designs,
+                        the channel) during ``[start, end)`` where ``mask``
+    """
+    sc = run["scalars"]
+    kind = run["kind"]
+    read = kind == KIND_READ
+    hops = run["hops"]
+    op = run["op"]
+    completion = run["completion"]
+    failed = run["failed"]
+    ok = ~failed
+
+    cmd = np.maximum(
+        _ceil_div(sc["cmd_base_ns"] + hops * sc["hop_ns"], TICK_NS), 1)
+    xfer = _ceil_div(
+        _ceil_div(run["nbytes"] * sc["xfer_num"], sc["xfer_den"])
+        + hops * sc["hop_ns"], TICK_NS)
+    t0 = _tcand(run["plane"], run["arrival"], completion)
+    queue = t0 - run["arrival"]
+
+    if not run["is_scout"]:
+        d0 = sc["ovh"] + cmd + np.where(read, 0, xfer)
+        d1 = np.where(read, sc["ovh"] + xfer, 0)
+        # canonical wait-first placement: phase-0 runs back-to-back with
+        # the flash op and the (read) return transfer ending at completion
+        e0 = completion - d1 - op
+        s0 = e0 - d0
+        occ = [(s0, e0, ok)]
+        if bool(read.any()):
+            occ.append((completion - d1, completion, ok & read))
+        # fc_nearest lanes (nossd) wait for the selected FC *before* the
+        # step's t0, outside the scan's ``wait`` — it falls out as the
+        # exact residual of the completion identity (0 for fixed-FC lanes)
+        fc_stall = np.where(
+            ok, completion - (t0 + run["wait"] + d0 + op + d1), 0)
+        phases = {"fc_stall": fc_stall, "wait": run["wait"],
+                  "cmd_data": d0, "flash": op, "read_xfer": d1}
+    else:
+        hold = sc["hold"]
+        if hold:
+            dur = np.where(read, cmd + op + xfer, cmd + xfer)
+        else:
+            dur = np.where(read, xfer, cmd + xfer)
+        commit_end = completion - np.where(read, 0, op)
+        rtt = _ceil_div((run["scout_steps"] + hops) * run["scout_hop_ns"],
+                        TICK_NS)
+        t_resv = commit_end - dur - rtt
+        occ = [(t_resv, commit_end, ok)]
+        phases = {"wait": run["wait"], "scout_rtt": rtt, "circuit": dur,
+                  "flash": op}
+
+    return {"t0": t0, "queue": queue, "phases": phases, "occ": occ,
+            "cmd": cmd, "xfer": xfer}

@@ -1,0 +1,141 @@
+"""Resource x time-bucket heatmaps from flight-recorder runs.
+
+Turns the recorder's exact occupancy intervals into two matrices per run:
+
+* **utilization** — busy ticks per (chip, bucket), spread *exactly*: an
+  interval contributes its precise overlap with every bucket it crosses
+  (partial edges + a difference-array cumsum for the full middle buckets),
+  so each row's sum equals the chip's total held ticks to the tick.
+* **conflicts** — transaction conflict counts per (chip, bucket), binned
+  at the transaction's service start ``t0``.
+
+Exported as one long-format CSV (and optionally JSON) so a spreadsheet or
+the EXPERIMENTS.md walkthrough can pivot it:
+``run,design,metric,resource,bucket,bucket_start_us,value``.
+"""
+from __future__ import annotations
+
+import csv
+import json
+
+import numpy as np
+
+from repro.obs import events as _events
+from repro.ssd.config import TICK_NS
+
+__all__ = ["bucket_matrix", "run_heatmaps", "write_heatmap_csv"]
+
+
+def bucket_matrix(starts: np.ndarray, ends: np.ndarray,
+                  resource: np.ndarray, n_resources: int,
+                  bucket_ticks: int, n_buckets: int) -> np.ndarray:
+    """Exact busy-ticks per (resource, bucket) for intervals [start, end).
+
+    Vectorized: single-bucket intervals add their full length via
+    ``np.add.at``; multi-bucket intervals add partial head/tail overlaps
+    plus a per-row difference array (cumsum = ``bucket_ticks`` for every
+    interior bucket).  Intervals outside [0, n_buckets*bucket_ticks) are
+    clipped."""
+    out = np.zeros((n_resources, n_buckets), np.int64)
+    if len(starts) == 0 or n_buckets == 0:
+        return out
+    span = n_buckets * bucket_ticks
+    s = np.clip(starts, 0, span).astype(np.int64)
+    e = np.clip(ends, 0, span).astype(np.int64)
+    keep = e > s
+    s, e, r = s[keep], e[keep], np.asarray(resource)[keep]
+    if len(s) == 0:
+        return out
+    b0 = s // bucket_ticks
+    b1 = (e - 1) // bucket_ticks  # last bucket touched
+    flat = out.reshape(-1)
+    one = b0 == b1
+    np.add.at(flat, r[one] * n_buckets + b0[one], (e - s)[one])
+    multi = ~one
+    if multi.any():
+        rm, b0m, b1m = r[multi], b0[multi], b1[multi]
+        head = (b0m + 1) * bucket_ticks - s[multi]
+        tail = e[multi] - b1m * bucket_ticks
+        np.add.at(flat, rm * n_buckets + b0m, head)
+        np.add.at(flat, rm * n_buckets + b1m, tail)
+        # full interior buckets (b0+1 .. b1-1) via difference array
+        diff = np.zeros((n_resources, n_buckets + 1), np.int64)
+        dflat = diff.reshape(-1)
+        np.add.at(dflat, rm * (n_buckets + 1) + b0m + 1, 1)
+        np.add.at(dflat, rm * (n_buckets + 1) + b1m, -1)
+        out += np.cumsum(diff[:, :-1], axis=1) * bucket_ticks
+    return out
+
+
+def _pick_bucket_ticks(runs: list[dict], bucket_us: float | None,
+                       target_buckets: int = 120) -> int:
+    if bucket_us is not None:
+        return max(int(round(bucket_us * 1e3 / TICK_NS)), 1)
+    hi = 0
+    for run in runs:
+        if run["n"]:
+            hi = max(hi, int(run["completion"].max()))
+    return max(hi // target_buckets, 1)
+
+
+def run_heatmaps(run: dict, bucket_ticks: int) -> dict:
+    """Utilization + conflict matrices for one finalized run."""
+    n_nodes = run["n_nodes"]
+    hi = int(run["completion"].max()) if run["n"] else 0
+    n_buckets = hi // bucket_ticks + 1 if run["n"] else 0
+    tl = _events.derive_timeline(run)
+    util = np.zeros((n_nodes, n_buckets), np.int64)
+    for s, e, mask in tl["occ"]:
+        util += bucket_matrix(s[mask], e[mask], run["node"][mask],
+                              n_nodes, bucket_ticks, n_buckets)
+    conflicts = np.zeros((n_nodes, n_buckets), np.int64)
+    csel = run["conflict"] & ~run["failed"]
+    if csel.any() and n_buckets:
+        b = np.clip(tl["t0"][csel] // bucket_ticks, 0, n_buckets - 1)
+        np.add.at(conflicts.reshape(-1),
+                  run["node"][csel] * n_buckets + b, 1)
+    return {"util_ticks": util, "conflicts": conflicts,
+            "bucket_ticks": bucket_ticks, "n_buckets": n_buckets}
+
+
+def write_heatmap_csv(path: str, runs: list[dict],
+                      bucket_us: float | None = None,
+                      json_path: str | None = None) -> dict:
+    """Long-format CSV across every run; returns a summary.  Zero cells are
+    skipped (the matrices are sparse in time); a run's busy-tick total is
+    preserved exactly (see :func:`bucket_matrix`)."""
+    bucket_ticks = _pick_bucket_ticks(runs, bucket_us)
+    bucket_out_us = bucket_ticks * TICK_NS / 1e3
+    n_rows = 0
+    jdoc = []
+    with open(path, "w", newline="") as fh:
+        w = csv.writer(fh)
+        w.writerow(["run", "design", "metric", "resource", "bucket",
+                    "bucket_start_us", "value"])
+        for k, run in enumerate(runs):
+            if not run["n"]:
+                continue
+            hm = run_heatmaps(run, bucket_ticks)
+            tag = run["label"] or str(k)
+            for metric, mat in (("util_ticks", hm["util_ticks"]),
+                                ("conflicts", hm["conflicts"])):
+                res, buck = np.nonzero(mat)
+                for r, b in zip(res, buck):
+                    w.writerow([
+                        tag, run["design"], metric, f"chip{int(r)}",
+                        int(b), round(float(b) * bucket_out_us, 3),
+                        int(mat[r, b]),
+                    ])
+                    n_rows += 1
+            if json_path is not None:
+                jdoc.append({
+                    "run": tag, "design": run["design"],
+                    "bucket_us": bucket_out_us,
+                    "util_ticks": hm["util_ticks"].tolist(),
+                    "conflicts": hm["conflicts"].tolist(),
+                })
+    if json_path is not None:
+        with open(json_path, "w") as fh:
+            json.dump(jdoc, fh)
+    return {"path": path, "rows": n_rows, "bucket_us": bucket_out_us,
+            "runs": len(runs)}

@@ -1,0 +1,122 @@
+"""Structured metrics registry behind the process-wide ``bench.PERF`` dict.
+
+``bench.PERF`` grew organically as a free-form dict; every figure phase,
+cache layer and pipeline stage writes counters into it and
+``benchmarks/run.py`` snapshots deltas around each phase.  This module
+keeps that exact surface — ``PERF`` stays a real dict (a subclass), every
+``perf["x"] += 1`` / ``.get`` / ``.setdefault`` / ``.update`` call site and
+the BENCH_*.json schema are untouched — while adding what a free dict
+cannot offer:
+
+* **typed declarations**: every metric is declared once with a kind
+  (counter / gauge / timer / object) and a default, so a typo'd key is
+  distinguishable from a declared metric and tools can enumerate the
+  schema (``MetricsRegistry.schema()``);
+* **reset/snapshot semantics**: ``PerfDict.reset()`` restores the declared
+  defaults in place (same object identity — every module that did
+  ``from ... import PERF`` keeps a live view), ``snapshot()`` deep-copies
+  the current state, and ``delta(before)`` subtracts two snapshots'
+  numeric fields — the primitive scenario engines use to report per-run
+  counters instead of process-cumulative ones.
+"""
+from __future__ import annotations
+
+import copy
+import threading
+
+__all__ = ["MetricsRegistry", "PerfDict"]
+
+_KINDS = ("counter", "gauge", "timer", "object")
+
+
+class MetricsRegistry:
+    """Declaration table: metric name -> (kind, default value).
+
+    A registry is the *schema*; :class:`PerfDict` (from :meth:`view`) is
+    the live store.  Multiple views share the declarations but not the
+    values (the harness uses exactly one, ``bench.PERF``).
+    """
+
+    def __init__(self):
+        self._decls: dict[str, tuple[str, object]] = {}
+        self._lock = threading.Lock()
+
+    def declare(self, name: str, kind: str, default) -> str:
+        if kind not in _KINDS:
+            raise ValueError(f"unknown metric kind {kind!r}; one of {_KINDS}")
+        with self._lock:
+            prev = self._decls.get(name)
+            if prev is not None and prev[0] != kind:
+                raise ValueError(
+                    f"metric {name!r} already declared as {prev[0]}, "
+                    f"not {kind}")
+            self._decls[name] = (kind, default)
+        return name
+
+    def counter(self, name: str, default: int = 0) -> str:
+        return self.declare(name, "counter", default)
+
+    def gauge(self, name: str, default=None) -> str:
+        return self.declare(name, "gauge", default)
+
+    def timer(self, name: str, default: float = 0.0) -> str:
+        return self.declare(name, "timer", default)
+
+    def object(self, name: str, default) -> str:
+        """Structured payloads (lists/dicts) that ride along the scoreboard
+        — e.g. the per-group records under ``PERF["groups"]``."""
+        return self.declare(name, "object", default)
+
+    def schema(self) -> dict:
+        """{name: kind} for every declared metric (stable snapshot)."""
+        with self._lock:
+            return {k: v[0] for k, v in self._decls.items()}
+
+    def defaults(self) -> dict:
+        with self._lock:
+            return {k: copy.deepcopy(v[1]) for k, v in self._decls.items()}
+
+    def view(self) -> "PerfDict":
+        return PerfDict(self)
+
+
+class PerfDict(dict):
+    """A live metrics store that is also a plain dict.
+
+    Undeclared keys still work (a dict is a dict — ad-hoc keys written by
+    older call sites or tests are tolerated), but only declared keys come
+    back after :meth:`reset` and only numeric values participate in
+    :meth:`delta`.
+    """
+
+    def __init__(self, registry: MetricsRegistry):
+        self._registry = registry
+        super().__init__(registry.defaults())
+
+    def reset(self) -> None:
+        """Restore declared defaults *in place* (object identity kept)."""
+        self.clear()
+        self.update(self._registry.defaults())
+
+    def snapshot(self) -> dict:
+        """Deep copy of the current state (safe to mutate / diff later)."""
+        return copy.deepcopy(dict(self))
+
+    def delta(self, before: dict) -> dict:
+        """Numeric field-wise ``self - before`` (int/float/bool leaves).
+
+        Keys absent from ``before`` diff against the declared default when
+        numeric, else 0 — so a counter born after the snapshot still
+        reports its full increment.  Non-numeric fields (lists, dicts,
+        strings, None) are skipped: deltas are for counters/timers/gauges.
+        """
+        defaults = self._registry.defaults()
+        out = {}
+        for k, v in self.items():
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                continue
+            b = before.get(k, defaults.get(k, 0))
+            if isinstance(b, bool) or not isinstance(b, (int, float)):
+                b = 0
+            out[k] = v - b
+        return out

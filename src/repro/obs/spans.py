@@ -1,0 +1,100 @@
+"""Harness span tracer: wall-clock instrumentation of the pipeline.
+
+Hook sites (``sweep_plan``, ``sim``, ``stream``, ``scenario``,
+``benchmarks/run.py``) call the module-level :func:`span` /
+:func:`instant` helpers, which are no-ops while ``TRACER`` is None — the
+disabled cost is one global read per call.  Enabled, every span records
+``(track, name, t_start, duration, args, thread)`` against a monotonic
+clock anchored at the tracer's creation; ``t0_wall`` (epoch seconds at the
+same instant) lets out-of-process sidecar events (the ``xc_worker``
+compile server) land on the same timeline.
+
+Spans from different threads go to different trace rows (the exporter
+keys tracks by ``(track, thread)``), so B/E pairs always nest properly —
+a ``with span(...)`` block *is* the nesting.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+import time
+
+__all__ = ["SpanTracer", "TRACER", "span", "instant"]
+
+
+class SpanTracer:
+    def __init__(self, max_events: int = 200_000):
+        self.t0_wall = time.time()
+        self.t0_perf = time.perf_counter()
+        self.max_events = max_events
+        self._events: list = []
+        self._dropped = 0
+        self._lock = threading.Lock()
+
+    def now_us(self) -> float:
+        return (time.perf_counter() - self.t0_perf) * 1e6
+
+    def _add(self, ev: tuple) -> None:
+        with self._lock:
+            if len(self._events) >= self.max_events:
+                self._dropped += 1
+                return
+            self._events.append(ev)
+
+    def complete(self, track: str, name: str, ts_us: float, dur_us: float,
+                 args: dict | None = None) -> None:
+        """One finished span (exported as a B/E pair)."""
+        self._add(("span", track, name, ts_us, max(dur_us, 0.0), args,
+                   threading.get_ident()))
+
+    def instant(self, track: str, name: str, args: dict | None = None,
+                ts_us: float | None = None) -> None:
+        ts = self.now_us() if ts_us is None else ts_us
+        self._add(("instant", track, name, ts, 0.0, args,
+                   threading.get_ident()))
+
+    @contextlib.contextmanager
+    def span(self, track: str, name: str, **args):
+        t0 = self.now_us()
+        try:
+            yield
+        finally:
+            self.complete(track, name, t0, self.now_us() - t0,
+                          args or None)
+
+    def drain(self) -> list:
+        """All recorded events (sorted by start time); tracer keeps them —
+        export is repeatable."""
+        with self._lock:
+            evs = sorted(self._events, key=lambda e: e[3])
+            if self._dropped:
+                evs.append(("instant", "tracer", "events_dropped",
+                            self.now_us(), 0.0,
+                            {"dropped": self._dropped},
+                            threading.get_ident()))
+            return evs
+
+
+# The one process-wide tracer; None = disabled (see ``repro.obs``).
+TRACER: SpanTracer | None = None
+
+
+@contextlib.contextmanager
+def span(track: str, name: str, **args):
+    """``with span("compile", "ensure_compiled", key=...):`` — no-op when
+    tracing is off."""
+    tr = TRACER
+    if tr is None:
+        yield
+        return
+    t0 = tr.now_us()
+    try:
+        yield
+    finally:
+        tr.complete(track, name, t0, tr.now_us() - t0, args or None)
+
+
+def instant(track: str, name: str, **args) -> None:
+    tr = TRACER
+    if tr is not None:
+        tr.instant(track, name, args or None)

@@ -18,6 +18,7 @@ from typing import Dict, Iterable
 
 import numpy as np
 
+from repro.obs.registry import MetricsRegistry, PerfDict
 from repro.ssd.config import SSDConfig
 from repro.ssd.ftl import Transactions, decompose_trace
 from repro.ssd.sim import SimResult
@@ -80,49 +81,70 @@ def record_accel(name: str, cfg: SSDConfig, factor: float, offered: float,
 # (``groups`` holds one record per dispatched lane group) so every speedup
 # in a BENCH_*.json is attributable.  ``benchmarks/run.py`` snapshots these
 # around each figure phase.
-PERF: dict = {
-    "ftl_s": 0.0, "sim_s": 0.0,
-    "decomp_hits": 0, "decomp_misses": 0,
-    "run_hits": 0, "run_subset_hits": 0, "run_misses": 0,
-    "run_prefetched": 0,
-    "lanes": 0, "scan_steps_valid": 0, "scan_steps_padded": 0,
-    "devices_used": 0, "compile_s": 0.0, "exec_s": 0.0,
-    "groups": [],
-    # warm-path execution backend (DESIGN.md §2.2): persistent-executable
-    # store telemetry (hits/misses/errors/stores mirrored from
-    # ``exec_cache.STATS``, plus deserialize wall-clock) and the overlapped
-    # compile/execute pipeline split — background compile time hidden
-    # behind execution vs time the dispatcher actually stalled
-    "xc_hits": 0, "xc_misses": 0, "xc_errors": 0, "xc_stores": 0,
-    "xc_tombstones": 0, "xc_load_s": 0.0,
-    "compile_overlap_s": 0.0, "compile_wait_s": 0.0,
-    # self-healing compile pipeline (ISSUE 8): compile-server watchdog
-    # trips (heartbeat loss / straggler / crash — see
-    # ``sweep_plan._ServerWatchdog``), the reason of the last trip, and
-    # how many delegated keys fell back to in-process compilation
-    "xc_watchdog_trips": 0, "xc_watchdog_reason": None,
-    "xc_watchdog_fallbacks": 0,
-    # streaming engine (repro.ssd.stream): windows replayed and wall-clock
-    # spent in the overlapped prep stage (decompose + order + pack) — prep
-    # that hides behind execution shows up here but not in compile_wait_s
-    "stream_windows": 0, "stream_prep_s": 0.0,
-    # kernel-dispatch split (ISSUE 7): per-backend group counts
-    # ({"xla"|"pallas-interpret"|"pallas-compiled": n}) and how many
-    # lane-steps ran through the batched static step vs the unbatched
-    # scan — the backend/batching share surfaced in BENCH_*.json's
-    # ``kernel_dispatch`` block and the trajectory table
-    "kernel_backends": {},
-    "steps_batched": 0, "steps_unbatched": 0,
-    # current figure phase (set by benchmarks/run.py) + per-phase run-cache
-    # attribution: {phase: {"hits": n, "from": {origin_phase: n}}}
-    "phase": None,
-    "phase_cache": {},
-    # per-(workload, config) accelerated-replay audit trail: the
-    # ``accelerate()`` scale factor and the offered utilization before/after
-    # scaling (satellite: the factor used to be computed and dropped by
-    # ``run_workload`` callers, leaving replays unauditable).
-    "accel": {},
-}
+#
+# Declared through the structured metrics registry (ISSUE 9): ``PERF`` is
+# a :class:`repro.obs.registry.PerfDict` — still a real dict with exactly
+# the historical keys (BENCH_*.json schema unchanged, every ``perf["x"] +=``
+# call site untouched) — gaining typed declarations plus
+# ``reset()``/``snapshot()``/``delta()`` semantics so scenario engines can
+# report per-run counter deltas instead of process-cumulative ones.
+METRICS = MetricsRegistry()
+METRICS.timer("ftl_s")
+METRICS.timer("sim_s")
+for _c in ("decomp_hits", "decomp_misses", "run_hits", "run_subset_hits",
+           "run_misses", "run_prefetched", "lanes", "scan_steps_valid",
+           "scan_steps_padded"):
+    METRICS.counter(_c)
+METRICS.gauge("devices_used", 0)
+METRICS.timer("compile_s")
+METRICS.timer("exec_s")
+METRICS.object("groups", [])
+# warm-path execution backend (DESIGN.md §2.2): persistent-executable
+# store telemetry (hits/misses/errors/stores mirrored from
+# ``exec_cache.STATS``, plus deserialize wall-clock) and the overlapped
+# compile/execute pipeline split — background compile time hidden
+# behind execution vs time the dispatcher actually stalled
+for _c in ("xc_hits", "xc_misses", "xc_errors", "xc_stores",
+           "xc_tombstones"):
+    METRICS.counter(_c)
+METRICS.timer("xc_load_s")
+METRICS.timer("compile_overlap_s")
+METRICS.timer("compile_wait_s")
+# self-healing compile pipeline (ISSUE 8): compile-server watchdog trips
+# (heartbeat loss / straggler / crash — see ``sweep_plan._ServerWatchdog``),
+# the reason of the last trip, and how many delegated keys fell back to
+# in-process compilation
+METRICS.counter("xc_watchdog_trips")
+METRICS.gauge("xc_watchdog_reason", None)
+METRICS.counter("xc_watchdog_fallbacks")
+# streaming engine (repro.ssd.stream): windows replayed and wall-clock
+# spent in the overlapped prep stage (decompose + order + pack) — prep
+# that hides behind execution shows up here but not in compile_wait_s
+METRICS.counter("stream_windows")
+METRICS.timer("stream_prep_s")
+# kernel-dispatch split (ISSUE 7): per-backend group counts
+# ({"xla"|"pallas-interpret"|"pallas-compiled": n}) and how many
+# lane-steps ran through the batched static step vs the unbatched
+# scan — the backend/batching share surfaced in BENCH_*.json's
+# ``kernel_dispatch`` block and the trajectory table
+METRICS.object("kernel_backends", {})
+METRICS.counter("steps_batched")
+METRICS.counter("steps_unbatched")
+# current figure phase (set by benchmarks/run.py) + per-phase run-cache
+# attribution: {phase: {"hits": n, "from": {origin_phase: n}}}
+METRICS.gauge("phase", None)
+METRICS.object("phase_cache", {})
+# per-(workload, config) accelerated-replay audit trail: the
+# ``accelerate()`` scale factor and the offered utilization before/after
+# scaling (satellite: the factor used to be computed and dropped by
+# ``run_workload`` callers, leaving replays unauditable).
+METRICS.object("accel", {})
+# workload ingestion (ISSUE 9 satellite): rows skipped by
+# ``ingest.load_trace(on_error="skip")`` across the process — nonzero
+# counts also emit a warning naming the file (see ``workloads/ingest.py``)
+METRICS.counter("ingest_skipped_rows")
+
+PERF: PerfDict = METRICS.view()
 
 # The FTL engine the harness decomposes with ("auto" | "vector" | "scalar");
 # benchmarks/run.py --ftl-engine flips this for A/B perf runs.

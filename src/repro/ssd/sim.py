@@ -57,6 +57,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.scout import make_tables, scout_route
 from repro.core.topology import build_mesh
+from repro.obs import spans as obs_spans
 from repro.kernels import onehot
 from repro.ssd.config import SSDConfig, TICK_NS
 from repro.ssd.designs import (
@@ -1383,6 +1384,10 @@ def ensure_compiled(key: tuple, lowered=None):
     dt = time.perf_counter() - t0
     with _TALLY_LOCK:
         bench.PERF["compile_s"] += dt
+    tr = obs_spans.TRACER
+    if tr is not None:
+        tr.complete("compile", f"compile:{key[0]}", tr.now_us() - dt * 1e6,
+                    dt * 1e6, {"source": "build"})
     exec_cache.store(key, compiled)
     _EXEC_CACHE[key] = compiled
     return compiled, dt, "build"
@@ -1410,7 +1415,9 @@ def _run_compiled(key: tuple, args: tuple, specs: tuple, *, lanes: int,
     compiled, dt, src = ensure_compiled(key)
     args = _put_args(args, specs, n_shards)
     t0 = time.perf_counter()
-    outs = jax.device_get(compiled(*args))
+    with obs_spans.span("exec", f"exec:{key[0]}", lanes=lanes,
+                        shards=n_shards, steps=steps * CHUNK):
+        outs = jax.device_get(compiled(*args))
     exec_s = time.perf_counter() - t0
     kb = kernel_backend_of_key(key)
     perf = {

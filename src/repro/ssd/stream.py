@@ -59,6 +59,8 @@ import jax
 import numpy as np
 
 from repro.core.topology import build_mesh
+from repro.obs import events as obs_events
+from repro.obs import spans as obs_spans
 from repro.ssd import bench
 from repro.ssd import sim as S
 from repro.ssd import sweep_plan as SP
@@ -426,6 +428,10 @@ def stream_simulate(
                                  + prep["prep_s"])
         return prep
 
+    def _prep_traced(w: int) -> dict:
+        with obs_spans.span("stream-prep", "prep", window=w):
+            return _prepare(w)
+
     agg = [
         {"completion": [], "arrival": [], "wait": [], "conflict": [],
          "hops": [], "tries": [], "misroutes": [], "kind": [], "op": [],
@@ -436,13 +442,21 @@ def stream_simulate(
     windows: list = []
     wait_total = 0.0
 
+    rec = obs_events.RECORDER
+    stream_id = rec.stream_token() if rec is not None else 0
+    if rec is not None and cur_spec is not None:
+        for ln in lanes:
+            rec.record_fault_swap(ln.design, 0, ln.tables_row,
+                                  cfg.rows * cfg.cols, stream_id)
+    tracer = obs_spans.TRACER
     pool = concurrent.futures.ThreadPoolExecutor(
         max_workers=1, thread_name_prefix="stream-prep")
     try:
-        prep = _prepare(0)
-        fut_next = (pool.submit(_prepare, 1) if n_windows > 1 else None)
+        prep = _prep_traced(0)
+        fut_next = (pool.submit(_prep_traced, 1) if n_windows > 1 else None)
         for w in range(n_windows):
             t_w = time.perf_counter()
+            t_span = tracer.now_us() if tracer is not None else 0.0
             base = w * W
             # window-boundary fault injection: swap the faulted tables in
             # as executable ARGUMENTS (the lanec key's promotions are
@@ -456,6 +470,13 @@ def stream_simulate(
                 for i, ln in enumerate(lanes):
                     ln.tables_row = LaneTables(
                         *(np.asarray(a)[i] for a in t_f))
+                if rec is not None:
+                    for ln in lanes:
+                        rec.record_fault_swap(ln.design, base,
+                                              ln.tables_row,
+                                              cfg.rows * cfg.cols,
+                                              stream_id)
+                obs_spans.instant("stream", "fault_swap", window=w)
             n = prep["n"]
             if capture is not None:
                 capture.append({"w": w, "packed": prep["packed"], "n": n})
@@ -480,6 +501,12 @@ def stream_simulate(
                         lambda a: np.asarray(a)[0], st)
                     out_row = S.StepOut(
                         *(np.asarray(a)[0][:n] for a in outs))
+                    if rec is not None:
+                        rec.record_window(
+                            cfg, ln.design, prep["packed"], prep["op"],
+                            out_row, base, n, prep["arrival_abs"],
+                            ln.tables_row, ln.scout, stream_id,
+                        )
                     a = agg[i]
                     a["completion"].append(
                         out_row.completion.astype(np.int64) + base)
@@ -513,6 +540,11 @@ def stream_simulate(
                 ln.state = S.rebase_lane_state(ln.state, W)
             wait_total += wait_s
             wall_s = time.perf_counter() - t_w
+            if tracer is not None:
+                tracer.complete("stream", f"window {w}", t_span,
+                                tracer.now_us() - t_span,
+                                {"n_txns": n, "n_requests": prep["n_req"],
+                                 "compile_wait_s": round(wait_s, 4)})
             windows.append({
                 "window": w,
                 "n_requests": prep["n_req"],
@@ -526,7 +558,7 @@ def stream_simulate(
             })
             if fut_next is not None:
                 prep = fut_next.result()
-                fut_next = (pool.submit(_prepare, w + 2)
+                fut_next = (pool.submit(_prep_traced, w + 2)
                             if w + 2 < n_windows else None)
     finally:
         pool.shutdown(wait=True)

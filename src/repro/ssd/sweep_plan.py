@@ -57,6 +57,8 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.obs import events as obs_events
+from repro.obs import spans as obs_spans
 from repro.ssd import bench
 from repro.ssd import exec_cache
 from repro.ssd import sim as S
@@ -262,6 +264,8 @@ def _fail_server(reason: str) -> int:
     perf = bench.PERF
     perf["xc_watchdog_trips"] = perf.get("xc_watchdog_trips", 0) + 1
     perf["xc_watchdog_reason"] = reason
+    obs_spans.instant("watchdog", "server_abandoned", reason=reason,
+                      reclaimed_keys=n)
     return n
 
 
@@ -316,6 +320,8 @@ def _schedule_compiles(keys: list) -> None:
             )
             _PROC_KEYS.update(remote)
             _WATCHDOG = _ServerWatchdog(hb_path)
+            obs_spans.instant("compile", "xc_server_launched",
+                              delegated_keys=len(remote))
         for k in local:
             S.ensure_compiled(k)
     else:
@@ -332,6 +338,8 @@ def _await_server(key: tuple):
     wd = _WATCHDOG
     if wd is not None:
         wd.track(key)
+    tr = obs_spans.TRACER
+    t_span = tr.now_us() if tr is not None else 0.0
     deadline = time.perf_counter() + 600.0
     try:
         while (_proc_alive() and not exec_cache.has(key)
@@ -351,6 +359,9 @@ def _await_server(key: tuple):
         perf["xc_watchdog_fallbacks"] = (
             perf.get("xc_watchdog_fallbacks", 0) + 1
         )
+    if tr is not None:
+        tr.complete("compile", "await_xc_server", t_span,
+                    tr.now_us() - t_span)
     return S.ensure_compiled(key)
 
 
@@ -757,10 +768,12 @@ def _execute_plans(plans: list) -> list:
                  if p.key not in futures or futures[p.key].done()]
         if not ready:
             t0 = time.perf_counter()
-            concurrent.futures.wait(
-                {futures[p.key] for p in pending if p.key in futures},
-                return_when=concurrent.futures.FIRST_COMPLETED,
-            )
+            with obs_spans.span("dispatch", "compile_stall",
+                                pending=len(pending)):
+                concurrent.futures.wait(
+                    {futures[p.key] for p in pending if p.key in futures},
+                    return_when=concurrent.futures.FIRST_COMPLETED,
+                )
             wait_s += time.perf_counter() - t0
             continue
         p = ready[0]
@@ -769,7 +782,10 @@ def _execute_plans(plans: list) -> list:
             _, dt, src = futures[p.key].result()
             compile_recs[p.key] = [dt, src]
             _INFLIGHT.pop(p.key, None)
-        g = _dispatch(p)
+        with obs_spans.span("dispatch", f"group:{p.variant}",
+                            lanes=len(p.lanes), shards=p.n_shards,
+                            capacity=p.cap):
+            g = _dispatch(p)
         rec = compile_recs.get(p.key)
         if rec is not None and rec[1] != "claimed":
             dt, src = rec
@@ -892,6 +908,7 @@ def execute_sim_runs(runs: Sequence[tuple]) -> list:
     for lanes in pools.values():
         for ln in lanes:
             by_run.setdefault((ln.run_idx, ln.design_idx), []).append(ln)
+    rec = obs_events.RECORDER
     for run_idx, (cfg, txns, designs, order, op, n) in enumerate(prepared):
         run_res = []
         for i, design in enumerate(designs):
@@ -912,6 +929,19 @@ def execute_sim_runs(runs: Sequence[tuple]) -> list:
             run_res.append(
                 S._finish_result(cfg, design, txns, order, op, outs, n)
             )
+            if rec is not None:
+                # flight recorder: same ingredients as _finish_result —
+                # purely host-side, the scan carried nothing extra
+                run_in = runs[run_idx]
+                if len(run_in) > 5 and run_in[5] is not None:
+                    rec.record_fault_swap(design, 0, lanes[0].tables_row,
+                                          cfg.rows * cfg.cols)
+                rec.record_run(
+                    cfg, design, txns, order, op, outs, n,
+                    lanes[0].tables_row,
+                    lanes[0].spec.kind == KIND_SCOUT,
+                    label=f"run{run_idx}",
+                )
         results.append(run_res)
     return results
 

@@ -50,10 +50,40 @@ def _start_heartbeat() -> None:
                      name="xc-heartbeat").start()
 
 
+def _span_writer():
+    """Appender for the parent's span sidecar (``REPRO_XC_SPANS``).
+
+    The worker can't share the parent's in-memory tracer, so it appends
+    one JSON line per compiled key — ``{"name", "t0_epoch", "dur_s", ...}``
+    in epoch seconds — and the parent's trace export rebases the lines onto
+    its own clock as ``xc-worker`` track spans.  No-op when the parent
+    isn't tracing; write failures never disturb compilation."""
+    import json
+    import os
+    import time
+
+    path = os.environ.get("REPRO_XC_SPANS")
+    if not path:
+        return lambda name, t0, **kw: None
+
+    def emit(name: str, t0: float, **kw) -> None:
+        try:
+            with open(path, "a") as f:
+                f.write(json.dumps(
+                    {"name": name, "t0_epoch": t0,
+                     "dur_s": time.time() - t0, **kw}) + "\n")
+        except OSError:
+            pass
+
+    return emit
+
+
 def main() -> None:
     import os
+    import time
 
     _start_heartbeat()
+    emit_span = _span_writer()
     with open(sys.argv[1], "rb") as f:
         keys = pickle.load(f)
     os.unlink(sys.argv[1])
@@ -61,9 +91,11 @@ def main() -> None:
     # load-time tombstone fallback covers the residual risk — skip the
     # store-time round-trip verification to publish entries sooner
     os.environ["REPRO_XC_VERIFY"] = "0"
+    t_boot = time.time()
     from repro.ssd import exec_cache
     from repro.ssd import sim as S
 
+    emit_span("worker_boot", t_boot, keys=len(keys))
     # one compile stream: keys arrive in the parent's need order, so the
     # earliest-needed programs publish first (a second stream was measured
     # to DELAY early programs and fight the parent's executing devices for
@@ -72,7 +104,9 @@ def main() -> None:
         try:
             if exec_cache.has(key):
                 continue
+            t0 = time.time()
             S.ensure_compiled(key)
+            emit_span(f"compile:{key[0]}", t0)
         except Exception as e:  # noqa: BLE001 — skip, parent will compile
             print(f"[xc_worker] {key[0]} failed: {type(e).__name__}: {e}",
                   file=sys.stderr, flush=True)

@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import gzip
 import os
+import warnings
 from typing import Dict, Iterator
 
 import numpy as np
@@ -241,7 +242,31 @@ def load_trace(
     if compact:
         trace = compact_footprint(trace)
     trace["skipped_rows"] = int(stats.get("skipped_rows", 0))
+    if trace["skipped_rows"]:
+        _report_skipped(path, trace["skipped_rows"])
     return trace
+
+
+# files already warned about this process — silent drops should be loud,
+# but once per file, not once per re-ingest of the same fixture
+_WARNED_SKIPS: set = set()
+
+
+def _report_skipped(path: str, count: int) -> None:
+    """Surface silently-dropped rows: one warning per file per process,
+    plus the ``ingest_skipped_rows`` counter in ``bench.PERF`` (always
+    incremented, so harness telemetry sees every drop even after the
+    warning deduplicates)."""
+    from repro.ssd import bench  # lazy: keep ingest importable without jax
+
+    bench.PERF["ingest_skipped_rows"] += count
+    if path not in _WARNED_SKIPS:
+        _WARNED_SKIPS.add(path)
+        warnings.warn(
+            f"load_trace({path!r}): skipped {count} corrupted row"
+            f"{'s' if count != 1 else ''} under on_error='skip'",
+            stacklevel=3,
+        )
 
 
 def compact_footprint(

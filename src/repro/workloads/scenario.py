@@ -43,11 +43,13 @@ through ``bench.decompose_cached`` (the content-digest LRU).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Dict, Sequence
 
 import numpy as np
 
+from repro.obs import spans as obs_spans
 from repro.ssd import bench
 from repro.ssd.config import TICK_NS
 from repro.ssd.sim import SimResult
@@ -64,9 +66,45 @@ __all__ = [
     "DegradedModeSweep", "degraded_fault_spec",
     "run_scenario", "run_queue_depth_sweeps", "run_stream_replay",
     "run_degraded_mode", "design_metrics", "closed_loop_arrivals",
+    "last_run_perf",
 ]
 
 DEFAULT_QDS = (1, 2, 4, 8, 16, 32, 64)
+
+# Per-run telemetry of the most recent scenario-engine call: the
+# ``bench.PERF`` counter/timer *delta* attributable to that run alone
+# (ISSUE 9 satellite — PERF is process-cumulative, so engines that read it
+# directly leak state between runs).  Kept OUT of the returned records on
+# purpose: scenario records are pinned bit-identical across re-runs and
+# merge orders by tests/test_scenarios.py, and wall-clock-derived keys
+# would break that.  Read it via :func:`last_run_perf`.
+LAST_RUN_PERF: Dict | None = None
+
+
+def last_run_perf() -> Dict | None:
+    """PERF delta of the most recent scenario-engine run (None before any)."""
+    return LAST_RUN_PERF
+
+
+def _perf_scoped(fn):
+    """Engine decorator: snapshot ``bench.PERF`` around the run and publish
+    the per-run delta to ``LAST_RUN_PERF``, with a harness span on the
+    ``scenario`` track.  Nested engine calls (``run_queue_depth_sweep`` →
+    ``run_queue_depth_sweeps``) leave the *outermost* delta in place."""
+
+    @functools.wraps(fn)
+    def wrapped(cfg, scn, designs):
+        global LAST_RUN_PERF
+        before = bench.PERF.snapshot()
+        name = (type(scn).__name__ if not isinstance(scn, (tuple, list))
+                else f"{len(scn)}x{type(scn[0]).__name__}" if scn
+                else "empty")
+        with obs_spans.span("scenario", f"{fn.__name__}:{name}"):
+            out = fn(cfg, scn, designs)
+        LAST_RUN_PERF = bench.PERF.delta(before)
+        return out
+
+    return wrapped
 
 
 @dataclasses.dataclass(frozen=True)
@@ -215,6 +253,7 @@ def closed_loop_arrivals(completion_ticks: np.ndarray, qd: int) -> np.ndarray:
     return np.maximum.accumulate(a)
 
 
+@_perf_scoped
 def run_queue_depth_sweeps(cfg, scns: Sequence[QueueDepthSweep],
                            designs: Sequence[str]) -> list:
     """Round-merged execution of several closed-loop QD sweeps.
@@ -317,6 +356,7 @@ def _tenant_filter(merged: Dict, t: int) -> Dict:
     return out
 
 
+@_perf_scoped
 def run_multi_tenant(cfg, scn: MultiTenantMix,
                      designs: Sequence[str]) -> Dict:
     designs = tuple(designs)
@@ -379,6 +419,7 @@ def run_multi_tenant(cfg, scn: MultiTenantMix,
 # ---------------------------------------------------------------------------
 
 
+@_perf_scoped
 def run_stream_replay(cfg, scn: StreamReplay,
                       designs: Sequence[str]) -> Dict:
     """Replay one workload through the chunked streaming engine."""
@@ -413,6 +454,7 @@ def run_stream_replay(cfg, scn: StreamReplay,
 # ---------------------------------------------------------------------------
 
 
+@_perf_scoped
 def run_burst_scale(cfg, scn: BurstScale, designs: Sequence[str]) -> Dict:
     designs = tuple(designs)
     n_req = scn.n_requests or default_n_requests(scn.workload)
@@ -481,6 +523,7 @@ def degraded_fault_spec(cfg, count: int, placement: str = "per_channel",
     return FaultSpec(failed_links=links)
 
 
+@_perf_scoped
 def run_degraded_mode(cfg, scn: DegradedModeSweep,
                       designs: Sequence[str]) -> Dict:
     """Run one degradation sweep; returns per-design retention curves."""
