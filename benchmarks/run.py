@@ -646,7 +646,9 @@ def main() -> None:
             "groups": bench.PERF["groups"],
             # kernel-dispatch split: which lane-step kernel each group ran
             # (xla / pallas-interpret / pallas-compiled) and the share of
-            # lane-steps served by the batched static runner
+            # lane-steps served by the batched runners — static and scout
+            # lanes tallied separately (the scout split is ISSUE 10's
+            # figure of merit)
             "kernel_dispatch": {
                 "lane_backend": sim.resolve_lane_backend(),
                 "planner_profile": sweep_plan.planner_profile(),
@@ -657,6 +659,13 @@ def main() -> None:
                     bench.PERF["steps_batched"]
                     / max(bench.PERF["steps_batched"]
                           + bench.PERF["steps_unbatched"], 1), 4),
+                "steps_scout_batched": bench.PERF["steps_scout_batched"],
+                "steps_scout_unbatched":
+                    bench.PERF["steps_scout_unbatched"],
+                "scout_batched_share": round(
+                    bench.PERF["steps_scout_batched"]
+                    / max(bench.PERF["steps_scout_batched"]
+                          + bench.PERF["steps_scout_unbatched"], 1), 4),
             },
             # accelerated-replay audit: per-(workload, config) scale factor
             # and offered utilization (satellite — previously dropped)

@@ -49,17 +49,20 @@ def _fmt(v, nd=1):
 
 
 def _kernel_split(art: dict) -> tuple:
-    """("batched%", "backend") cells from the ``kernel_dispatch`` block;
-    pre-PR-7 artifacts lack it and render as "-"."""
+    """("batched%", "scout%", "backend") cells from the
+    ``kernel_dispatch`` block; pre-PR-7 artifacts lack the block and
+    pre-PR-10 ones the scout split — both render as "-"."""
     kd = art.get("kernel_dispatch")
     if not kd:
-        return "-", "-"
+        return "-", "-", "-"
     share = kd.get("batched_share")
     share_s = "-" if share is None else f"{100.0 * float(share):.0f}%"
+    sshare = kd.get("scout_batched_share")
+    sshare_s = "-" if sshare is None else f"{100.0 * float(sshare):.0f}%"
     backends = kd.get("backends") or {}
     be_s = ("-" if not backends else
             " ".join(f"{k}:{v}" for k, v in sorted(backends.items())))
-    return share_s, be_s
+    return share_s, sshare_s, be_s
 
 
 def rows_for(arts: list) -> tuple:
@@ -68,14 +71,14 @@ def rows_for(arts: list) -> tuple:
               if any(p in (a.get("phases") or {}) for _, a in arts)]
     header = (["artifact", "total_s", "ftl_s", "sim_s", "compile_s",
                "exec_s", "cwait_s", "covl_s", "groups", "cache_hits(xc)",
-               "batched%", "kernels"]
+               "batched%", "scout%", "kernels"]
               + [f"{p}_s" for p in phases])
     rows = []
     for name, art in arts:
         ph = art.get("phases") or {}
         xc = art.get("exec_cache") or {}
         groups = art.get("groups")
-        share_s, be_s = _kernel_split(art)
+        share_s, sshare_s, be_s = _kernel_split(art)
         rows.append(
             [name.replace("BENCH_", "").replace(".json", ""),
              _fmt(art.get("total_s")), _fmt(art.get("ftl_s_total"), 2),
@@ -85,7 +88,7 @@ def rows_for(arts: list) -> tuple:
              _fmt(art.get("compile_wait_s"), 2),
              _fmt(art.get("compile_overlap_s"), 2),
              str(len(groups)) if isinstance(groups, list) else "-",
-             str(xc.get("hits", "-")), share_s, be_s]
+             str(xc.get("hits", "-")), share_s, sshare_s, be_s]
             + [_fmt((ph.get(p) or {}).get("s")) for p in phases]
         )
     return header, rows
@@ -105,9 +108,10 @@ def render(results_dir: str) -> str:
                  "persistent AOT store (warm runs); `cwait_s`/`covl_s` split "
                  "background compilation into dispatcher stall vs time "
                  "hidden behind execution; `batched%` is the share "
-                 "of lane-steps run by the batched static step and `kernels` "
-                 "the per-backend group counts (xla / pallas-interpret / "
-                 "pallas-compiled).")
+                 "of static lane-steps run by the batched static step, "
+                 "`scout%` the share of scout lane-steps run by the batched "
+                 "scout runner, and `kernels` the per-backend group counts "
+                 "(xla / pallas-interpret / pallas-compiled).")
     for preset in sorted(by_preset):
         header, rows = rows_for(by_preset[preset])
         lines += ["", f"## preset: {preset}", ""]

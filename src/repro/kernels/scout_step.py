@@ -183,6 +183,27 @@ def _kernel(state_ref, busy_ref, tried_ref, tables_ref, state_o, busy_o, tried_o
     tried_o[...] = t
 
 
+def _kernel_vec(state_ref, busy_ref, tried_ref, tables_ref, allow_ref,
+                state_o, busy_o, tried_o, *, cols, n_nodes):
+    """Per-scout ``allow_nonminimal`` variant: the flag rides in as a
+    traced ``[B, 1]`` int32 operand instead of a compile-time constant —
+    one executable serves pools that mix minimal-only and adaptive
+    scouts (the batched scout lane runner batches across designs)."""
+    state = state_ref[...]
+    busy = busy_ref[...]
+    tried = tried_ref[...]
+    tables = tables_ref[...]
+    allow = allow_ref[...][:, 0].astype(bool)
+    port_link = tables[:n_nodes, 0:4]
+    port_neighbor = tables[:n_nodes, 4:8]
+    s, b, t = step_math(
+        state, busy, tried, port_link, port_neighbor, cols, allow
+    )
+    state_o[...] = s
+    busy_o[...] = b
+    tried_o[...] = t
+
+
 def pack_tables(topo: MeshTopology) -> np.ndarray:
     n_pad = -(-topo.n_nodes // 8) * 8
     t = np.full((n_pad, 128), -1, dtype=np.int32)
@@ -200,6 +221,7 @@ def scout_step_pallas(
     busy,
     tried,
     tables,
+    allow_vec=None,
     *,
     cols: int,
     n_nodes: int,
@@ -213,24 +235,38 @@ def scout_step_pallas(
     int32 (0/1); tables from ``pack_tables``.  B must be a multiple of
     ``b_tile`` (pad with dummy scouts).  ``interpret=None`` resolves from
     the actual JAX backend (compiled on GPU/TPU, interpreted on CPU).
+
+    ``allow_vec`` (int32/bool [B] or [B, 1], traced) carries a per-scout
+    ``allow_nonminimal`` flag for pools that mix routing modes; when given
+    it supersedes the static ``allow_nonminimal`` constant (which stays
+    the cheaper choice for uniform pools — no extra operand to stream).
     """
     interpret = default_interpret(interpret)
     B = state.shape[0]
     assert B % b_tile == 0, "pad the scout batch to a multiple of b_tile"
     T = tried.shape[1]
     grid = (B // b_tile,)
-    kernel = functools.partial(
-        _kernel, cols=cols, n_nodes=n_nodes, allow_nonminimal=allow_nonminimal
-    )
+    in_specs = [
+        pl.BlockSpec((b_tile, STATE_W), lambda i: (i, 0)),
+        pl.BlockSpec((b_tile, busy.shape[1]), lambda i: (i, 0)),
+        pl.BlockSpec((b_tile, T), lambda i: (i, 0)),
+        pl.BlockSpec((tables.shape[0], 128), lambda i: (0, 0)),
+    ]
+    if allow_vec is None:
+        kernel = functools.partial(
+            _kernel, cols=cols, n_nodes=n_nodes,
+            allow_nonminimal=allow_nonminimal,
+        )
+        operands = (state, busy, tried, tables)
+    else:
+        kernel = functools.partial(_kernel_vec, cols=cols, n_nodes=n_nodes)
+        in_specs.append(pl.BlockSpec((b_tile, 1), lambda i: (i, 0)))
+        operands = (state, busy, tried, tables,
+                    allow_vec.astype(jnp.int32).reshape(B, 1))
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((b_tile, STATE_W), lambda i: (i, 0)),
-            pl.BlockSpec((b_tile, busy.shape[1]), lambda i: (i, 0)),
-            pl.BlockSpec((b_tile, T), lambda i: (i, 0)),
-            pl.BlockSpec((tables.shape[0], 128), lambda i: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((b_tile, STATE_W), lambda i: (i, 0)),
             pl.BlockSpec((b_tile, busy.shape[1]), lambda i: (i, 0)),
@@ -242,4 +278,4 @@ def scout_step_pallas(
             jax.ShapeDtypeStruct((B, T), jnp.int32),
         ],
         interpret=interpret,
-    )(state, busy, tried, tables)
+    )(*operands)

@@ -126,10 +126,14 @@ METRICS.timer("stream_prep_s")
 # ({"xla"|"pallas-interpret"|"pallas-compiled": n}) and how many
 # lane-steps ran through the batched static step vs the unbatched
 # scan — the backend/batching share surfaced in BENCH_*.json's
-# ``kernel_dispatch`` block and the trajectory table
+# ``kernel_dispatch`` block and the trajectory table.  Scout lanes
+# tally separately (ISSUE 10): their batched runner landed three PRs
+# after the static one, so the scout split is the figure of merit.
 METRICS.object("kernel_backends", {})
 METRICS.counter("steps_batched")
 METRICS.counter("steps_unbatched")
+METRICS.counter("steps_scout_batched")
+METRICS.counter("steps_scout_unbatched")
 # current figure phase (set by benchmarks/run.py) + per-phase run-cache
 # attribution: {phase: {"hits": n, "from": {origin_phase: n}}}
 METRICS.gauge("phase", None)

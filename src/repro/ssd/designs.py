@@ -529,6 +529,20 @@ def pregather_node_tables(tables_row, nodes: np.ndarray) -> dict:
     )
 
 
+def pregather_scout_tables(tables_row, nodes: np.ndarray) -> dict:
+    """Resolve one SCOUT lane's node-indexed tables per transaction.
+
+    The scout step's only node-indexed design table is ``dist`` (FC
+    selection + the command-packet hop estimate); the path itself is found
+    at runtime by the DFS, so there are no candidate masks to pre-gather.
+    Returns ``dist`` int32 [n, F_pad] (same layout contract as
+    :func:`pregather_node_tables`).
+    """
+    return dict(
+        dist=np.ascontiguousarray(np.asarray(tables_row.dist).T[nodes]),
+    )
+
+
 # ---------------------------------------------------------------------------
 # channel-decomposition proof obligation
 #

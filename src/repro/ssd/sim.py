@@ -59,6 +59,8 @@ from repro.core.scout import make_tables, scout_route
 from repro.core.topology import build_mesh
 from repro.obs import spans as obs_spans
 from repro.kernels import onehot
+from repro.kernels.ops import route_dfs
+from repro.kernels.scout_step import pack_tables, scout_step_pallas, step_math
 from repro.ssd.config import SSDConfig, TICK_NS
 from repro.ssd.designs import (
     DESIGNS,
@@ -1137,6 +1139,385 @@ def _build_batched_fn(sig: tuple, capacity: int, fixed: tuple,
 
 
 # ---------------------------------------------------------------------------
+# gather-free batched SCOUT runner (venice-family lanes)
+#
+# The batched static runner above left the paper's own designs on the flat
+# per-lane scan: the scout DFS (a while_loop whose trip count diverges per
+# lane) was the blocker.  The batched formulation here steps [B] scout DFS
+# machines in lockstep — the per-step decision is ``kernels.scout_step``'s
+# one-hot compare-and-reduce math (the [B,N]x[N,4] port-table matmul,
+# lane-aligned busy/tried bitmaps), the backtracking memory is
+# ``kernels.ops.route_dfs``'s driver-resident stacks, and each lane routes
+# against its OWN link-occupancy map (one [B, L0] busy row per lane — the
+# lanes are independent simulations, not one mesh).  Divergence cost is
+# max-over-B steps per retry, which amortizes the per-op XLA CPU dispatch
+# overhead exactly like the static batch; every decision, rng draw, retry
+# schedule and k-scout race stays bit-exact vs the flat scan (pinned in
+# tests/test_batched_scout.py against both ``simulate`` and
+# ``scalar_ref``).  ``backend`` promotes ``scout_step_pallas`` into the
+# DFS inner loop (compiled on GPU/TPU, interpret on CPU) — same math, so
+# bit-exact by construction.
+# ---------------------------------------------------------------------------
+
+
+def _avail1_b(res, i, e, d):
+    """Batched ``_avail1``: per-lane resource index ``i`` [B] into a
+    [B, K] triple, gather-free (one-hot take)."""
+    free, gap_s, gap_e = res
+    return _gap_avail(onehot.take(gap_s, i), onehot.take(gap_e, i),
+                      onehot.take(free, i), e, d)
+
+
+def _commit1_b(res, i, s, e2, enable):
+    """Batched ``_commit1``: one-hot scatter of the per-lane commit."""
+    free, gap_s, gap_e = res
+    gs, ge, fa = _gap_commit(onehot.take(gap_s, i), onehot.take(gap_e, i),
+                             onehot.take(free, i), s, e2)
+    upd = onehot.onehot(i, free.shape[1]) & enable[:, None]
+    return (
+        jnp.where(upd, fa[:, None], free),
+        jnp.where(upd, gs[:, None], gap_s),
+        jnp.where(upd, ge[:, None], gap_e),
+    )
+
+
+def _sched_gap_b(res, i, e, d, enable):
+    s = _avail1_b(res, i, e, d)
+    s = jnp.where(enable, s, e)
+    res = _commit1_b(res, i, s, s + d, enable)
+    return s, res
+
+
+class ScoutBatchScalars(NamedTuple):
+    """Per-lane design scalars of a batched scout group (same layout
+    contract as :class:`BatchScalars`) plus the FC node map the scout
+    source lookup needs."""
+
+    hold: jnp.ndarray
+    allow_nonmin: jnp.ndarray
+    n_scouts: jnp.ndarray
+    fc_nearest: jnp.ndarray
+    count_bus: jnp.ndarray
+    ovh: jnp.ndarray
+    cmd_base_ns: jnp.ndarray
+    xfer_num: jnp.ndarray
+    xfer_den: jnp.ndarray
+    hop_ns: jnp.ndarray
+    d_est_hops: jnp.ndarray
+    d_est_pad: jnp.ndarray
+    fc_valid: jnp.ndarray  # bool [B, F_pad]
+    fc_node: jnp.ndarray  # int32 [B, F_pad]
+    res_dead: jnp.ndarray  # bool [B, R_pad]
+
+
+class ScoutBatchTxnTables(NamedTuple):
+    """Per-transaction pre-gathered tables for the scout step, time-major
+    (see ``designs.pregather_scout_tables``) — the scout path only ever
+    indexes ``dist`` by the transaction's node."""
+
+    dist: jnp.ndarray  # int32 [cap, B, F_pad]
+
+
+def _make_batched_scout_step(lay, topo, scout_hop_ns: int, n_planes: int,
+                             k_max: int, fixed: tuple, backend: str):
+    """The scout-routed scan step over a lane batch [B].
+
+    Mirrors ``scout_step`` + ``scout_until_success`` in ``_make_step``
+    operation for operation with a leading lane axis (consult those for
+    the modeling semantics); all arithmetic is int32 one-hot/masked-select
+    work, so batched == unbatched bit-for-bit.  The flat ``scout_route``
+    DFS is replaced by ``kernels.ops.route_dfs`` around the batched
+    ``step_math`` decision (XLA) or ``scout_step_pallas`` (the promoted
+    kernel) — the same Algorithm-1 decision procedure, pinned equivalent.
+    """
+    L0 = lay.L_pad
+    n_fcs = lay.rows
+    n_nodes = lay.n_nodes
+    fixed = dict(zip(_PROMOTABLE, fixed))
+    tables_dev = jnp.asarray(pack_tables(topo))
+    n_pad = tables_dev.shape[0]
+    pl_, pn_ = tables_dev[:n_nodes, 0:4], tables_dev[:n_nodes, 4:8]
+    port_link_dev = jnp.asarray(topo.port_link, jnp.int32)
+    cols = topo.cols
+
+    def fx(sp, name):
+        v = fixed[name]
+        return getattr(sp, name) if v is None else v
+
+    def cmd_ticks(sp, hops):
+        ns = fx(sp, "cmd_base_ns") + hops * fx(sp, "hop_ns")
+        return jnp.maximum(_ceil_div(ns, TICK_NS), 1).astype(jnp.int32)
+
+    def xfer_ticks(sp, nbytes, hops):
+        ns = _ceil_div(nbytes * fx(sp, "xfer_num"), fx(sp, "xfer_den"))
+        ns = ns + hops * fx(sp, "hop_ns")
+        return _ceil_div(ns, TICK_NS).astype(jnp.int32)
+
+    def commit_mask_b(res, mask, s, e2, enable):
+        free, gap_s, gap_e = res
+        gs, ge, fa = _gap_commit(gap_s, gap_e, free, s[:, None], e2[:, None])
+        take = mask & enable[:, None]
+        return (
+            jnp.where(take, fa, free),
+            jnp.where(take, gs, gap_s),
+            jnp.where(take, ge, gap_e),
+        )
+
+    def _merge_b(take, a, b):
+        return jax.tree_util.tree_map(
+            lambda x, y: jnp.where(
+                take.reshape(take.shape + (1,) * (x.ndim - 1)), x, y),
+            a, b,
+        )
+
+    def make_step_fn(sp, B):
+        """The per-DFS-iteration decision step for this batch, honoring a
+        promoted-static or per-lane-traced ``allow_nonmin``."""
+        allow = fx(sp, "allow_nonmin")
+        if backend == "xla":
+            b_tile = B
+
+            def step_fn(state, busy, tried):
+                return step_math(state, busy, tried, pl_, pn_, cols, allow)
+
+            return step_fn, b_tile
+        b_tile = 256 if B % 256 == 0 else -(-B // 8) * 8
+        interpret = backend != "pallas"
+        if isinstance(allow, (bool, np.bool_)):
+            def step_fn(state, busy, tried):
+                return scout_step_pallas(
+                    state, busy, tried, tables_dev,
+                    cols=cols, n_nodes=n_nodes,
+                    allow_nonminimal=bool(allow),
+                    interpret=interpret, b_tile=b_tile,
+                )
+        else:
+            Bp = B + ((-B) % b_tile)
+            allow_p = jnp.zeros((Bp,), jnp.int32).at[:B].set(
+                jnp.asarray(allow).astype(jnp.int32))
+
+            def step_fn(state, busy, tried):
+                return scout_step_pallas(
+                    state, busy, tried, tables_dev, allow_p,
+                    cols=cols, n_nodes=n_nodes,
+                    interpret=interpret, b_tile=b_tile,
+                )
+        return step_fn, b_tile
+
+    def scout_until_success_b(links3, sp, src, dst, t0, rng, d_hold, valid):
+        """Batched ``scout_until_success``: every lane follows its own
+        retry schedule (its links triple is lane-local), frozen lanes'
+        (res, t, rng, tries) ride through the joint while_loop untouched —
+        per-lane bit-identity with the flat loop."""
+        n_scouts = fx(sp, "n_scouts")
+        dead_links = sp.res_dead[:, :L0]
+        B = src.shape[0]
+        step_fn, b_tile = make_step_fn(sp, B)
+
+        def route(busy, rngs, act):
+            # non-participating lanes route a src==dst==0 dummy scout
+            # (finishes in one step); their results are never merged
+            src_e = jnp.where(act, src, 0)
+            dst_e = jnp.where(act, dst, 0)
+            return route_dfs(step_fn, port_link_dev, src_e, dst_e, busy,
+                             rngs, n_pad=n_pad, b_tile=b_tile)
+
+        def try_once(t, rng, act):
+            busy = _busy_at(links3, t[:, None], d_hold[:, None]) | dead_links
+            best = None
+            for k in range(k_max):
+                rng_adv = (
+                    rng * jnp.uint32(747796405) + jnp.uint32(2891336453)
+                ) | jnp.uint32(1)
+                active = jnp.asarray(k < n_scouts)  # bool or traced [B]
+                rng = jnp.where(jnp.logical_and(act, active), rng_adv, rng)
+                res = route(busy, rng, act)
+                res = res._replace(path_mask=res.path_mask[:, :L0])
+                if best is None:
+                    best = res
+                else:
+                    take = res.success & active & (
+                        (~best.success) | (res.hops < best.hops)
+                    )
+                    best = _merge_b(take, res, best)
+            return best, rng
+
+        res0, rng = try_once(t0, rng, valid)
+
+        def cond(carry):
+            res, t, rng, tries = carry
+            return jnp.any(valid & (~res.success) & (tries < _MAX_TRIES))
+
+        def body(carry):
+            res, t, rng, tries = carry
+            live = valid & (~res.success) & (tries < _MAX_TRIES)
+            free, gap_s, _ = links3
+            ev = jnp.minimum(
+                jnp.min(jnp.where(free > t[:, None], free, _BIG), axis=1),
+                jnp.min(jnp.where(gap_s > t[:, None], gap_s, _BIG), axis=1),
+            )
+            t_next = jnp.maximum(ev, t + 1)
+            t_next = jnp.where(tries + 1 >= _MAX_TRIES,
+                               jnp.max(free, axis=1), t_next)
+            t_next = jnp.where(live, t_next, t)
+            res2, rng2 = try_once(t_next, rng, live)
+            res = _merge_b(live, res2, res)
+            rng = jnp.where(live, rng2, rng)
+            return res, t_next, rng, tries + live.astype(jnp.int32)
+
+        res, t, rng, tries = jax.lax.while_loop(
+            cond, body, (res0, t0, rng, jnp.ones((B,), jnp.int32))
+        )
+        return res, t, rng, tries
+
+    def step(sp: ScoutBatchScalars, state, xs):
+        tx, tt = xs
+        plane_free, links, fcs, chips, rng = state
+        valid = tx.valid
+        is_read = tx.kind == KIND_READ
+        tcand = jnp.maximum(tx.arrival, onehot.take(plane_free, tx.plane))
+        hold = fx(sp, "hold")
+
+        d_est = (xfer_ticks(sp, tx.nbytes, fx(sp, "d_est_hops"))
+                 + fx(sp, "d_est_pad"))
+        if hold is not False:
+            d_est = d_est + jnp.where(
+                jnp.logical_and(hold, is_read), tx.op_ticks, 0
+            )
+        avail = _avail_all(fcs, tcand[:, None], d_est[:, None])
+        avail = jnp.where(sp.fc_valid[:, :n_fcs], avail, _BIG)
+        dist_row = tt.dist[:, :n_fcs]
+        free_now = avail <= tcand[:, None]
+        any_free = jnp.any(free_now, axis=1)
+        by_dist = jnp.argmin(jnp.where(free_now, dist_row, _BIG), axis=1)
+        by_time = jnp.argmin(avail, axis=1)
+        fc = jnp.where(any_free, by_dist, by_time).astype(jnp.int32)
+        t0 = jnp.maximum(tcand, onehot.take(avail, fc))
+        src = onehot.take(sp.fc_node[:, :n_fcs], fc)
+        min_hops = onehot.take(dist_row, fc)
+        cmd_pkt = cmd_ticks(sp, min_hops)
+        en_cmd = valid & is_read & jnp.logical_not(hold)
+        s_cmd, fcs = _sched_gap_b(fcs, fc, t0, cmd_pkt, en_cmd)
+        ready_r = s_cmd + cmd_pkt + tx.op_ticks
+        t_nonread = jnp.maximum(t0, _avail1_b(chips, tx.node, t0, d_est))
+        t_read = jnp.maximum(
+            jnp.maximum(ready_r, _avail1_b(fcs, fc, ready_r, d_est)),
+            _avail1_b(chips, tx.node, ready_r, d_est),
+        )
+        t_xfer_req = jnp.where(is_read, t_read, t_nonread)
+        t_scout = jnp.where(hold, t0, t_xfer_req)
+        sres, t_resv, rng, tries = scout_until_success_b(
+            links, sp, src, tx.node, t_scout, rng, d_est, valid
+        )
+        hops_o = sres.hops
+        rtt = _ceil_div((sres.steps + hops_o) * scout_hop_ns, TICK_NS)
+        start = t_resv + rtt.astype(jnp.int32)
+        cmd_v = cmd_ticks(sp, hops_o)
+        xfer_v = xfer_ticks(sp, tx.nbytes, hops_o)
+        dur_p = jnp.where(is_read, xfer_v, cmd_v + xfer_v)
+        end_p = start + dur_p
+        done_p = jnp.where(is_read, end_p, end_p + tx.op_ticks)
+        wait_p = (s_cmd - t0) + (start - t_xfer_req)
+        done_r_h = start + cmd_v + tx.op_ticks + xfer_v
+        data_end_w = start + cmd_v + xfer_v
+        circuit_end = jnp.where(is_read, done_r_h, data_end_w)
+        done_h = jnp.where(is_read, done_r_h, data_end_w + tx.op_ticks)
+        commit_end = jnp.where(hold, circuit_end, end_p)
+        done = jnp.where(hold, done_h, done_p)
+        wait = jnp.where(hold, start - t0, wait_p)
+        fail = ~sres.success
+        ok = valid & sres.success
+        done = jnp.where(fail, tcand + FAIL_TIMEOUT, done)
+        wait = jnp.where(fail, FAIL_TIMEOUT, wait)
+        links = commit_mask_b(links, sres.path_mask, t_resv, commit_end, ok)
+        fcs = _commit1_b(fcs, fc, t_resv, commit_end, ok)
+        chips = _commit1_b(chips, tx.node, t_resv, commit_end, ok)
+        upd = onehot.onehot(tx.plane, n_planes) & valid[:, None]
+        plane_free = jnp.where(upd, done[:, None], plane_free)
+        zero = jnp.zeros_like(done)
+        out = StepOut(
+            completion=jnp.where(valid, done, tx.arrival),
+            wait=jnp.where(valid, wait, 0),
+            conflict=valid & ((tries > 1) | fail),
+            hops=jnp.where(valid, hops_o, 0),
+            tries=jnp.where(valid, tries, 0),
+            scout_steps=jnp.where(valid, sres.steps, 0),
+            misroutes=jnp.where(valid, sres.misroutes, 0),
+            bus_hold=zero,
+            link_hold=jnp.where(valid & jnp.logical_not(fail),
+                                hops_o * (commit_end - t_resv), 0),
+            failed=valid & fail,
+        )
+        return (plane_free, links, fcs, chips, rng), out
+
+    return step
+
+
+def _make_batched_scout_run(step, capacity: int, n_planes: int, L0: int,
+                            n_fcs: int, n_nodes: int):
+    """Chunked batched scout scan — the scout-state analogue of
+    :func:`_make_batched_run` (seeds ride as an argument; the scan state
+    mirrors the flat scout ``init_state`` with a leading lane axis)."""
+
+    def batch_run(scal, seeds, txns: TxnArrays, tt: ScoutBatchTxnTables,
+                  n_chunks):
+        B = n_chunks.shape[0]
+        trip = lambda n: tuple(
+            jnp.zeros((B, n), jnp.int32) for _ in range(3))
+        state = (
+            jnp.zeros((B, n_planes), jnp.int32),
+            trip(L0),
+            trip(n_fcs),
+            trip(n_nodes),
+            jnp.asarray(seeds, jnp.uint32),
+        )
+
+        def chunk_body(c, carry):
+            st, buf = carry
+            off = c * CHUNK
+            sl = lambda a: jax.lax.dynamic_slice_in_dim(a, off, CHUNK, 0)
+            xs = (jax.tree_util.tree_map(sl, txns),
+                  jax.tree_util.tree_map(sl, tt))
+            st, outs = jax.lax.scan(lambda s, x: step(scal, s, x), st, xs)
+            buf = jax.tree_util.tree_map(
+                lambda b, o: jax.lax.dynamic_update_slice_in_dim(b, o, off, 0),
+                buf, outs,
+            )
+            return st, buf
+
+        _, buf = jax.lax.fori_loop(
+            0, jnp.max(n_chunks), chunk_body,
+            (state, _zero_out_tm(capacity, B)),
+        )
+        return buf  # StepOut, time-major [capacity, B]
+
+    return batch_run
+
+
+@functools.lru_cache(maxsize=None)
+def _build_batched_scout_fn(sig: tuple, capacity: int, k_max: int,
+                            fixed: tuple, n_shards: int, per_shard: int,
+                            backend: str = "xla"):
+    rows, cols, dies, planes_per_die, scout_hop_ns = sig
+    lay = sweep_layout_geom(rows, cols)
+    topo = build_mesh(rows, cols)
+    n_planes = rows * cols * dies * planes_per_die
+    step = _make_batched_scout_step(lay, topo, scout_hop_ns, n_planes,
+                                    k_max, fixed, backend)
+    brun = _make_batched_scout_run(step, capacity, n_planes, lay.L_pad,
+                                   lay.rows, lay.n_nodes)
+
+    if n_shards > 1:
+        spec = (P("lanes"), P("lanes"), P(None, "lanes"), P(None, "lanes"),
+                P("lanes"))
+        fn = shard_map(brun, mesh=_lane_mesh(n_shards), in_specs=spec,
+                       out_specs=P(None, "lanes"), check_rep=False)
+    else:
+        fn = brun
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
 # executable store: logical keys, shape avatars, compile-or-load
 #
 # Every program variant has a *logical key* — everything its machine code
@@ -1182,12 +1563,25 @@ def batched_group_key(sig, capacity, per_shard, fixed, n_shards,
     return ("batched", sig, capacity, per_shard, fixed, n_shards, backend)
 
 
+def bscout_group_key(sig, capacity, per_shard, k_max, fixed, n_shards,
+                     backend: str = "xla"):
+    """Batched scout group.  Same convention as ``batched_group_key``:
+    the default XLA backend key is the plain tuple (byte-stable in the
+    AOT store), pallas variants append the backend."""
+    if backend == "xla":
+        return ("bscout", sig, capacity, per_shard, k_max, fixed, n_shards)
+    return ("bscout", sig, capacity, per_shard, k_max, fixed, n_shards,
+            backend)
+
+
 def kernel_backend_of_key(key: tuple) -> str:
     """Which lane-step kernel a group key dispatches to: "xla" for all
-    unbatched variants and the default batched program, else the pallas
+    unbatched variants and the default batched programs, else the pallas
     flavor recorded in the key ("pallas-compiled" / "pallas-interpret")."""
     if key[0] == "batched" and len(key) > 6:
         return "pallas-compiled" if key[6] == "pallas" else key[6]
+    if key[0] == "bscout" and len(key) > 7:
+        return "pallas-compiled" if key[7] == "pallas" else key[7]
     return "xla"
 
 
@@ -1274,6 +1668,27 @@ def _avatars_for_key(key: tuple):
             _txns_avatar(G, capacity, n_shards),
             _sds((G,), np.int32, P("lanes"), n_shards),
         )
+    if kind == "bscout":
+        _, sig, capacity, per_shard, k_max, fixed, n_shards = key[:7]
+        B = per_shard * n_shards
+        lay = sweep_layout_geom(sig[0], sig[1])
+        F0, R = lay.F_pad, lay.R_pad
+        L, T = P("lanes"), P(None, "lanes")
+        scal = ScoutBatchScalars(
+            *(_sds((B,), _TABLE_SCALAR_DTYPES[name], L, n_shards)
+              for name in _PROMOTABLE),
+            fc_valid=_sds((B, F0), bool, L, n_shards),
+            fc_node=_sds((B, F0), np.int32, L, n_shards),
+            res_dead=_sds((B, R), bool, L, n_shards),
+        )
+        return (
+            scal,
+            _sds((B,), np.uint32, L, n_shards),
+            _txns_avatar(B, capacity, n_shards, time_major=True),
+            ScoutBatchTxnTables(
+                dist=_sds((capacity, B, F0), np.int32, T, n_shards)),
+            _sds((B,), np.int32, L, n_shards),
+        )
     _, sig, capacity, per_shard, fixed, n_shards = key[:6]
     B = per_shard * n_shards
     lay = sweep_layout_geom(sig[0], sig[1])
@@ -1315,6 +1730,11 @@ def _fn_for_key(key: tuple):
         _, sig, capacity, K, k_max, has_scout, fixed, n_shards = key
         return _build_stack_fn(sig, capacity, K, k_max, has_scout, fixed,
                                n_shards)
+    if kind == "bscout":
+        _, sig, capacity, per_shard, k_max, fixed, n_shards = key[:7]
+        backend = key[7] if len(key) > 7 else "xla"
+        return _build_batched_scout_fn(sig, capacity, k_max, fixed,
+                                       n_shards, per_shard, backend)
     _, sig, capacity, per_shard, fixed, n_shards = key[:6]
     backend = key[6] if len(key) > 6 else "xla"
     return _build_batched_fn(sig, capacity, fixed, n_shards, per_shard,
@@ -1432,13 +1852,18 @@ def _run_compiled(key: tuple, args: tuple, specs: tuple, *, lanes: int,
     from repro.ssd import bench
 
     # kernel-dispatch scoreboard: which backend ran, and how many
-    # lane-steps went through the batched step vs the unbatched scan
+    # lane-steps went through the batched step vs the unbatched scan —
+    # split per cost class so the scout promotion is attributable
     # (the lock: the streaming engine executes groups off-thread)
     with _TALLY_LOCK:
         bench.PERF["kernel_backends"][kb] = (
             bench.PERF["kernel_backends"].get(kb, 0) + 1)
-        share_key = ("steps_batched" if key[0] == "batched"
-                     else "steps_unbatched")
+        if has_scout:
+            share_key = ("steps_scout_batched" if key[0] == "bscout"
+                         else "steps_scout_unbatched")
+        else:
+            share_key = ("steps_batched" if key[0] == "batched"
+                         else "steps_unbatched")
         bench.PERF[share_key] += steps * CHUNK
     return outs, perf
 
@@ -1572,6 +1997,36 @@ def run_batched_group(sig: tuple, scal: BatchScalars, txns: TxnArrays,
         (scal, txns, bt, ncs),
         (P("lanes"), P(None, "lanes"), P(None, "lanes"), P("lanes")),
         lanes=B, capacity=capacity, n_shards=n_shards, has_scout=False,
+        steps=shard_steps,
+    )
+
+
+def run_batched_scout_group(sig: tuple, scal: ScoutBatchScalars, seeds,
+                            txns: TxnArrays, tt: ScoutBatchTxnTables,
+                            n_chunks, k_max: int, fixed: tuple,
+                            n_shards: int, per_shard: int,
+                            backend: str = "xla") -> tuple:
+    """Execute one batched scout group; returns (StepOut [cap, B], perf).
+
+    Same layout contract as :func:`run_batched_group` plus the per-lane
+    rng ``seeds`` [B] (the scout state's fifth leg) and ``k_max`` (the
+    group's raced-scout ceiling — lanes below it are masked per their
+    ``n_scouts``).  Every backend is bit-exact.
+    """
+    B = int(np.asarray(n_chunks).shape[0])
+    capacity = int(np.asarray(txns.arrival).shape[0])
+    ncs = np.asarray(n_chunks, np.int32)
+    shard_steps = sum(
+        int(ncs[s * per_shard:(s + 1) * per_shard].max(initial=0))
+        * per_shard for s in range(max(1, n_shards))
+    )
+    return _run_compiled(
+        bscout_group_key(sig, capacity, per_shard, k_max, fixed, n_shards,
+                         backend),
+        (scal, np.asarray(seeds, np.uint32), txns, tt, ncs),
+        (P("lanes"), P("lanes"), P(None, "lanes"), P(None, "lanes"),
+         P("lanes")),
+        lanes=B, capacity=capacity, n_shards=n_shards, has_scout=True,
         steps=shard_steps,
     )
 

@@ -68,6 +68,7 @@ from repro.ssd.designs import (
     LaneTables,
     lower_designs,
     pregather_node_tables,
+    pregather_scout_tables,
     resolve_specs,
     rows_confined,
 )
@@ -113,7 +114,33 @@ _CAP_SEEN: dict = {}
 SMALL_LANE_MAX_CHUNKS = int(os.environ.get("REPRO_SMALL_LANE_CHUNKS", "2"))
 _BATCH_MIN_LANES = 3  # fewer small lanes than this stay on the flat path
 _BATCH_MAX_PER_SHARD = 4  # fork/join cliff (measured; see above)
+# Batched-SCOUT small-lane window: same shape as the static window but OFF
+# by default — the batched scout runner loses on CPU at every measured
+# width (B=4: 131us, B=8: 188us per lane-step vs 11.5us flat on the same
+# workload; EXPERIMENTS.md scout A/B table).  Unlike the static step, a
+# scout DFS decision is O(1) scalar work flat (four port probes compiled
+# to straight-line code) but O(L_pad + 4*N_pad) one-hot vector work per
+# lane batched — ~1.8us/lane-decision, linear in B with no amortization —
+# and the lockstep retry loop runs max-iterations-over-B, so batching
+# multiplies the inflated work by the slowest lane's divergence.  The
+# window stays as an opt-in (env below / occupancy profile) for
+# accelerator-shaped hosts where the one-hot rows are lane-parallel and
+# it is the serial gathers that are catastrophic.
+_BSCOUT_MAX_PER_SHARD = int(os.environ.get("REPRO_BSCOUT_PER_SHARD", "0"))
 _STACK_MAX_K = 16  # lanes executed sequentially per shard, at most
+
+# ---- planner cost-model weights (ordering heuristics only) ---------------
+# Measured, replacing the former 3x-compile / 4x-step guesses (EXPERIMENTS
+# "Scout lane layouts", measurement scripts quoted there).  Step weight:
+# warm quick-preset group records (bench.PERF) put flat scout lanes at
+# ~37.7us/step vs ~3.4us/step static.  Compile weights: cold
+# ensure_compiled() wall on the quick preset's 8x8 geometry, cap 1024 —
+# lane 1.9s static / 3.4s scout, stack 2.6/4.0, batched 2.8, bscout 5.3.
+# Relative weights, not seconds: a mis-estimate only reorders the
+# compile/dispatch queues.
+_COST_SCOUT_STEP = 11.0  # scout scan step vs static step (37.7 / 3.4)
+_COST_SCOUT_COMPILE = 1.7  # scout program compile vs static (3.4 / 1.9)
+_COST_MULTILANE_COMPILE = 1.4  # stack/batched compile vs lane (2.6 / 1.9)
 
 # ---- planner backend profile (DESIGN.md §2.2, Pallas lane layouts) -------
 # "cpu" is the layout above: one unbatched lane per host core, batching
@@ -125,8 +152,11 @@ _STACK_MAX_K = 16  # lanes executed sequentially per shard, at most
 # the batched runner (Pallas lane kernel when the lane backend says so).
 # "auto" picks occupancy on GPU/TPU and cpu otherwise, which keeps the
 # CPU profile — and every figure output — byte-identical by default.
-# Scout pools keep the cpu layout under every profile: the batched step
-# cannot serve the scout DFS (stretch goal, see ROADMAP item 5).
+# Scout pools follow the same split (ISSUE 10): occupancy-cut batched
+# scout groups (``sim._make_batched_scout_step``) under "occupancy"; the
+# cpu profile keeps the measured flat/stacked scout layout (its batched
+# small-lane window is opt-in via REPRO_BSCOUT_PER_SHARD — off by
+# default because it loses on CPU, see _BSCOUT_MAX_PER_SHARD above).
 PLANNER_PROFILE = os.environ.get("REPRO_PLANNER_PROFILE", "auto")
 _PROFILES = ("cpu", "occupancy", "auto")
 
@@ -473,7 +503,7 @@ def _pool_promotions(lanes: list) -> tuple:
 class _GroupPlan:
     """One planned dispatch: a group of lanes bound to an executable key."""
 
-    variant: str  # "lane" | "stack" | "batched"
+    variant: str  # "lane" | "stack" | "batched" | "bscout"
     sig: tuple
     lanes: list  # dispatch order; may contain duplicate refs (padding)
     cap: int
@@ -496,18 +526,25 @@ class _GroupPlan:
             self.key = S.stack_group_key(self.sig, self.cap, self.per_shard,
                                          self.k_max, self.has_scout,
                                          self.fixed, self.n_shards)
+        elif self.variant == "bscout":
+            self.key = S.bscout_group_key(self.sig, self.cap,
+                                          self.per_shard, self.k_max,
+                                          self.fixed, self.n_shards,
+                                          self.backend)
         else:
             self.key = S.batched_group_key(self.sig, self.cap,
                                            self.per_shard, self.fixed,
                                            self.n_shards, self.backend)
-        # cost model (ordering heuristics only): scout programs compile
-        # several times slower than static ones (the nested scout
-        # while-loops); execute cost scales with scheduled scan chunks
-        # (scout steps are ~4x a static step)
-        w = 4.0 if self.has_scout else 1.0
-        self.est_compile = (3.0 if self.has_scout else 1.0) * (
-            1.5 if self.variant != "lane" else 1.0
-        )
+        # cost model (ordering heuristics only), measured from SpanTracer
+        # plan->compile->dispatch spans on the quick preset (see
+        # EXPERIMENTS.md "Planner cost model"): scout programs compile
+        # slower than static ones (the nested scout while-loops) and a
+        # scout step costs more than a static step; execute cost scales
+        # with scheduled scan chunks
+        w = _COST_SCOUT_STEP if self.has_scout else 1.0
+        self.est_compile = (
+            _COST_SCOUT_COMPILE if self.has_scout else 1.0
+        ) * (_COST_MULTILANE_COMPILE if self.variant != "lane" else 1.0)
         self.est_exec = w * sum(ln.n_chunks for ln in self.lanes)
         return self
 
@@ -521,31 +558,32 @@ def _pad_block(block: list, size: int) -> list:
 
 def _plan_pool(sig: tuple, lanes: list, has_scout: bool) -> list:
     """Lay one (geometry, cost class) pool out as dispatchable groups,
-    under the active planner backend profile (:func:`planner_profile`).
-
-    Scout pools always use the cpu layout — the batched runner cannot
-    serve the scout DFS — so the profile only redistributes the
-    statically-routed lanes."""
-    if not has_scout and planner_profile() == "occupancy":
-        return _plan_pool_occupancy(sig, lanes)
+    under the active planner backend profile (:func:`planner_profile`)."""
+    if planner_profile() == "occupancy":
+        return _plan_pool_occupancy(sig, lanes, has_scout)
     return _plan_pool_cpu(sig, lanes, has_scout)
 
 
-def _plan_pool_occupancy(sig: tuple, lanes: list) -> list:
-    """Accelerator layout for a statically-routed pool: every lane runs in
-    the batched runner, grouped by occupancy — lanes x padded scan chunks
-    per device, cut at OCCUPANCY_CHUNKS — rather than core count.  Lanes
-    are length-sorted first, so a group's padded cost is its width times
-    its longest (last) member and mixed-length pools don't pay a long
-    lane's padding across every short one.  Bit-exact vs the cpu layout:
-    the batched step's masked-validity path makes the extra padding a
-    no-op, pinned by tests/test_batched_pallas.py.
+def _plan_pool_occupancy(sig: tuple, lanes: list, has_scout: bool) -> list:
+    """Accelerator layout for a pool: every lane runs in the batched
+    runner — gather-free static step for statically-routed pools, the
+    batched scout DFS runner (``sim._make_batched_scout_step``) for scout
+    pools — grouped by occupancy: lanes x padded scan chunks per device,
+    cut at OCCUPANCY_CHUNKS, rather than core count.  Lanes are
+    length-sorted first, so a group's padded cost is its width times its
+    longest (last) member and mixed-length pools don't pay a long lane's
+    padding across every short one.  Bit-exact vs the cpu layout: both
+    batched steps' masked-validity paths make the extra padding a no-op,
+    pinned by tests/test_batched_pallas.py and tests/test_batched_scout.py.
     """
     n_shards = S.host_device_count()
     order = sorted(lanes, key=lambda ln: ln.n_chunks)
     cap = max(_CAP_SEEN.get(sig, 0), S._pad_to(max(ln.n for ln in order)))
     _CAP_SEEN[sig] = cap
     backend = S.resolve_lane_backend()
+    k_max = (max(ln.spec.n_scouts for ln in lanes) if has_scout else 1)
+    fixed = _pool_promotions(lanes) if has_scout else _NO_PROMO
+    variant = "bscout" if has_scout else "batched"
     budget = max(1, OCCUPANCY_CHUNKS) * n_shards
     plans, i = [], 0
     while i < len(order):
@@ -557,8 +595,8 @@ def _plan_pool_occupancy(sig: tuple, lanes: list) -> list:
         i = j
         per = -(-len(blk) // n_shards)
         plans.append(_GroupPlan(
-            "batched", sig, _pad_block(blk, n_shards * per), cap,
-            n_shards, per, 1, False, _NO_PROMO, backend=backend,
+            variant, sig, _pad_block(blk, n_shards * per), cap,
+            n_shards, per, k_max, has_scout, fixed, backend=backend,
         ))
     return [p.finalize() for p in plans]
 
@@ -602,6 +640,19 @@ def _plan_pool_cpu(sig: tuple, lanes: list, has_scout: bool) -> list:
             plans.append(_GroupPlan(
                 "batched", sig, _pad_block(small, n_shards * Bs), scap,
                 n_shards, Bs, 1, False, _NO_PROMO,
+                backend=S.resolve_lane_backend(),
+            ))
+        elif has_scout and len(small) <= n_shards * _BSCOUT_MAX_PER_SHARD:
+            # the batched-scout analogue of the static window: one
+            # gather-free scout dispatch instead of K-per-shard lax.map
+            # stacks.  Like every small-lane layout it runs the fully
+            # generic program (``_NO_PROMO`` — hold/allow/n_scouts stay
+            # traced per lane) so one executable per (geometry, capacity,
+            # k_max) serves every pool.
+            Bs = -(-len(small) // n_shards)
+            plans.append(_GroupPlan(
+                "bscout", sig, _pad_block(small, n_shards * Bs), scap,
+                n_shards, Bs, k_max, True, _NO_PROMO,
                 backend=S.resolve_lane_backend(),
             ))
         else:
@@ -671,6 +722,47 @@ def _dispatch(plan: _GroupPlan) -> dict:
                 continue
             seen.add(id(ln))
             ln.out = S.StepOut(*(np.asarray(a)[j] for a in outs))
+    elif plan.variant == "bscout":
+        B = len(lanes)
+        scal = S.ScoutBatchScalars(
+            *(np.asarray([np.asarray(getattr(ln.tables_row, name))
+                          for ln in lanes])
+              for name in S._PROMOTABLE),
+            fc_valid=np.stack([np.asarray(ln.tables_row.fc_valid)
+                               for ln in lanes]),
+            fc_node=np.stack([np.asarray(ln.tables_row.fc_node)
+                              for ln in lanes]),
+            res_dead=np.stack([np.asarray(ln.tables_row.res_dead)
+                               for ln in lanes]),
+        )
+        seeds = np.asarray([ln.seed for ln in lanes], np.uint32)
+        txns = S.TxnArrays(*(
+            np.stack([np.asarray(a) for a in cols], axis=1)
+            for cols in zip(*(_pad_txns(ln.txns, cap) for ln in lanes))
+        ))
+        F0 = np.asarray(lanes[0].tables_row.fc_valid).shape[0]
+        tt = S.ScoutBatchTxnTables(
+            dist=np.zeros((cap, B, F0), np.int32),
+        )
+        done = {}
+        for j, ln in enumerate(lanes):
+            key = id(ln)
+            if key not in done:  # dup padding lanes share the pregather
+                done[key] = pregather_scout_tables(
+                    ln.tables_row, np.asarray(ln.txns.node)
+                )
+            tt.dist[:ln.n, j] = done[key]["dist"]
+        ncs = np.asarray([ln.n_chunks for ln in lanes], np.int32)
+        outs, perf = S.run_batched_scout_group(
+            plan.sig, scal, seeds, txns, tt, ncs, plan.k_max,
+            plan.fixed, plan.n_shards, plan.per_shard, plan.backend,
+        )
+        seen = set()
+        for j, ln in enumerate(lanes):
+            if id(ln) in seen:
+                continue
+            seen.add(id(ln))
+            ln.out = S.StepOut(*(np.asarray(a)[:, j] for a in outs))
     else:
         B = len(lanes)
         scal = S.BatchScalars(
